@@ -1,0 +1,60 @@
+"""Micro-benchmark of the coding layer itself: encode / decode throughput on
+CPU (jit'd jnp reference path — the Pallas kernels target TPU and are
+validated in interpret mode by tests) vs gradient dimension l, plus the
+host-side decode-weight solve time (the master's O(n^3) per-pattern cost the
+paper argues is negligible)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import make_code
+from repro.kernels import ref
+
+
+def _time(fn, *args, reps: int = 20) -> float:
+    fn(*args)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def run() -> list[str]:
+    out = []
+    code = make_code(16, 4, 1, 3)
+    enc = jax.jit(ref.coded_encode_ref)
+    dec = jax.jit(ref.coded_decode_ref)
+    rng = np.random.default_rng(0)
+    for l in (1 << 16, 1 << 20, 1 << 22):
+        V = l // code.m
+        G = jnp.asarray(rng.standard_normal((code.d, V, code.m)), jnp.float32)
+        C = jnp.asarray(code.C[0], jnp.float32)
+        F = jnp.asarray(rng.standard_normal((code.n, V)), jnp.float32)
+        W = jnp.asarray(code.decode_weights(range(1, 16)), jnp.float32)
+        t_enc = _time(enc, G, C)
+        t_dec = _time(dec, F, W)
+        gbps_enc = G.size * 4 / (t_enc / 1e6) / 1e9
+        gbps_dec = F.size * 4 / (t_dec / 1e6) / 1e9
+        out.append(f"coding_throughput,l={l},encode_us={t_enc:.0f},"
+                   f"decode_us={t_dec:.0f},enc_GBps={gbps_enc:.1f},"
+                   f"dec_GBps={gbps_dec:.1f}")
+    # host-side decode-weight solve (per straggler pattern)
+    for n in (16, 32):
+        c = make_code(n, 4, 1, 3)
+        resp = list(range(1, n))
+        t0 = time.perf_counter()
+        for _ in range(100):
+            c.decode_weights(resp)
+        t = (time.perf_counter() - t0) / 100 * 1e6
+        out.append(f"decode_weight_solve,n={n},us={t:.0f}")
+    return out
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

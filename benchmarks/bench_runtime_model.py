@@ -1,0 +1,95 @@
+"""Section VI-A numeric reproduction.
+
+Table 1 (n=8, lambda1=.8, lambda2=.1, t1=1.6, t2=6): E[T_tot] for all (d, m),
+expected optimum (d,s,m)=(4,1,3) with E=21.3697, uncoded 36.1138, best m=1
+coded 24.1063.  Tables 2-3: optimal triples as (lambda2,t2) / (lambda1,t1)
+vary."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.runtime_model import (RuntimeParams, expected_total_runtime,
+                                      optimal_triple, runtime_table)
+
+PAPER_N8 = {
+    (1, 1): 36.1138, (8, 1): 24.1063, (2, 2): 23.1036, (4, 3): 21.3697,
+    (3, 3): 22.2604, (8, 8): 42.0638,
+}
+
+
+def bench_table1(npts: int = 200_000) -> dict:
+    params = RuntimeParams(n=8, lambda1=0.8, lambda2=0.1, t1=1.6, t2=6.0)
+    tab = runtime_table(params, npts)
+    checks = {}
+    for (d, m), want in PAPER_N8.items():
+        got = tab[m - 1, d - 1]
+        checks[f"({d},{m})"] = (round(float(got), 4), want,
+                                abs(float(got) - want) < 2e-3)
+    (opt, ov) = optimal_triple(params, npts)
+    uncoded = expected_total_runtime(params, 1, 0, 1, npts)
+    (opt1, ov1) = optimal_triple(params, npts, restrict_m1=True)
+    return {
+        "table": np.round(tab, 4),
+        "checks": checks,
+        "optimal": (opt, round(ov, 4)),
+        "uncoded": round(uncoded, 4),
+        "best_m1": (opt1, round(ov1, 4)),
+        "win_vs_uncoded": round(1 - ov / uncoded, 4),
+        "win_vs_m1": round(1 - ov / ov1, 4),
+    }
+
+
+def bench_table2(npts: int = 40_000):
+    """Optimal (d,s,m) vs (lambda2, t2) at n=10, lambda1=.6, t1=1.5."""
+    rows = {}
+    for lam2 in (0.05, 0.1, 0.15, 0.2, 0.25, 0.3):
+        row = []
+        for t2 in (1.5, 3, 6, 12, 24, 48, 96):
+            p = RuntimeParams(10, 0.6, lam2, 1.5, t2)
+            (d, s, m), _ = optimal_triple(p, npts)
+            row.append((d, s, m))
+        rows[lam2] = row
+    return rows
+
+
+def bench_table3(npts: int = 40_000):
+    """Optimal (d,s,m) vs (lambda1, t1) at n=10, lambda2=.1, t2=6."""
+    rows = {}
+    for lam1 in (0.5, 0.6, 0.7, 0.8, 0.9, 1.0):
+        row = []
+        for t1 in (1, 1.3, 1.6, 1.9, 2.2, 2.5, 2.8):
+            p = RuntimeParams(10, lam1, 0.1, t1, 6.0)
+            (d, s, m), _ = optimal_triple(p, npts)
+            row.append((d, s, m))
+        rows[lam1] = row
+    return rows
+
+
+def run() -> list[str]:
+    out = []
+    r1 = bench_table1()
+    ok = all(v[2] for v in r1["checks"].values())
+    out.append(f"runtime_table1_n8,checks_pass={ok},"
+               f"optimal={r1['optimal'][0]}@{r1['optimal'][1]},"
+               f"uncoded={r1['uncoded']},best_m1={r1['best_m1'][1]},"
+               f"win_vs_uncoded={r1['win_vs_uncoded']:.1%},"
+               f"win_vs_m1={r1['win_vs_m1']:.1%}")
+    for k, (got, want, passed) in r1["checks"].items():
+        out.append(f"runtime_table1_entry,{k},got={got},paper={want},ok={passed}")
+    t2 = bench_table2()
+    paper_t2_row1 = [(10, 9, 1), (10, 8, 2), (10, 8, 2), (10, 7, 3),
+                     (10, 6, 4), (10, 5, 5), (10, 4, 6)]
+    out.append(f"runtime_table2_lam2=0.05,got={t2[0.05]},paper={paper_t2_row1},"
+               f"match={t2[0.05] == paper_t2_row1}")
+    out.append(f"runtime_table2_lam2=0.2,got={t2[0.2]}")
+    t3 = bench_table3()
+    paper_t3_row1 = [(10, 8, 2), (10, 8, 2), (3, 1, 2), (3, 1, 2), (3, 1, 2),
+                     (2, 0, 2), (2, 0, 2)]
+    out.append(f"runtime_table3_lam1=0.5,got={t3[0.5]},paper={paper_t3_row1},"
+               f"match={t3[0.5] == paper_t3_row1}")
+    return out
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

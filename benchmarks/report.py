@@ -1,0 +1,79 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from
+results/dryrun/*.json.  Printed to stdout; EXPERIMENTS.md embeds the output.
+
+  PYTHONPATH=src python -m benchmarks.report [--mesh single]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+from . import roofline
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def fmt_bytes(x: float) -> str:
+    for unit in ("B", "KB", "MB", "GB", "TB", "PB"):
+        if abs(x) < 1024 or unit == "PB":
+            return f"{x:.1f}{unit}"
+        x /= 1024
+    return f"{x:.1f}PB"
+
+
+def dryrun_table(records: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | status | compile s | arg bytes/dev | "
+           "temp bytes/dev | HLO flops/dev | collective bytes/dev |")
+    lines = [hdr, "|" + "---|" * 9]
+    for r in records:
+        if r.get("status") == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"SKIP ({r['reason'][:40]}...) | | | | | |")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"ERROR {r.get('error', '')[:60]} | | | | | |")
+            continue
+        mem = r.get("memory") or {}
+        coll = sum((r.get("collective_bytes") or {}).values())
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+            f"{r['compile_s']} | {fmt_bytes(mem.get('argument_size_in_bytes', 0))} | "
+            f"{fmt_bytes(mem.get('temp_size_in_bytes', 0))} | "
+            f"{r['flops']:.2e} | {fmt_bytes(coll)} |")
+    return "\n".join(lines)
+
+
+def load_records(mesh: str | None = None, schedule: str | None = None,
+                 tag: str | None = "") -> list[dict]:
+    out = []
+    for f in sorted(RESULTS.glob("*.json")):
+        r = json.loads(f.read_text())
+        if mesh and r.get("mesh") != mesh:
+            continue
+        if schedule and r.get("schedule") != schedule:
+            continue
+        if tag is not None and r.get("tag", "") != tag:
+            continue
+        out.append(r)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--schedule", default=None)
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    recs = load_records(args.mesh, args.schedule, args.tag)
+    print("### Dry-run table\n")
+    print(dryrun_table(recs))
+    print("\n### Roofline table (single-pod)\n")
+    rows = [roofline.analyze_record(r) for r in recs
+            if r.get("mesh") == "single" and r.get("status") == "ok"]
+    print(roofline.table([r for r in rows if r]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,144 @@
+"""§Roofline: derive the three roofline terms per (arch x shape x mesh) from
+the dry-run artifacts (results/dryrun/*.json).
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+  memory term     = HLO_bytes_per_device / HBM_bw_per_chip
+  collective term = wire_bytes_per_device / ICI_bw_per_chip
+
+The dry-run records loop-aware per-device numbers (the post-GSPMD module is
+the per-device program; see repro.launch.hlo_cost).  Wire-byte model:
+all-reduce moves ~2x its buffer (reduce-scatter + all-gather phases); the
+other collectives move ~their result size per device.
+
+Also reports MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) per device and
+the usefulness ratio MODEL_FLOPS / HLO_FLOPs (catches remat/redundancy
+waste — note the coded scheme's intended d-fold compute redundancy shows up
+here, as do the 2 FLOPs/MAC convention and attention/backward bookkeeping).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Iterable
+
+PEAK_FLOPS = 197e12       # bf16 / chip (v5e)
+HBM_BW = 819e9            # bytes/s / chip
+ICI_BW = 50e9             # bytes/s / link
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+_WIRE_FACTOR = {"all-reduce": 2.0}
+
+_LEVERS = {
+    "compute": ("shrink the d-fold coded redundancy (smaller d at same s+m) "
+                "or drop remat on cheap layers"),
+    "memory": ("raise arithmetic intensity: larger attention/matmul tiles, "
+               "bf16 collectives/activations, fewer HBM round-trips between "
+               "fused ops"),
+    "collective": ("raise m (smaller encodings), switch gather->a2a decode "
+                   "schedule, or overlap the collective with backprop"),
+}
+
+
+def model_flops_per_device(arch: str, shape_name: str, devices: int) -> float:
+    """Analytic 6*N*D (dense) / 6*N_active*D (MoE) for train; 2*N*D for
+    inference shapes.  D = tokens processed globally per step."""
+    from repro.configs import get_config
+    from repro.launch.shapes import SHAPES
+    import jax
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+
+    from repro.models import api as model_api
+    pshapes = jax.eval_shape(lambda: model_api.init(jax.random.PRNGKey(0), cfg))
+    n_total = sum(int(__import__("numpy").prod(x.shape))
+                  for x in jax.tree.leaves(pshapes))
+    n_active = n_total
+    if cfg.n_experts:
+        flat = jax.tree_util.tree_flatten_with_path(pshapes)[0]
+        expert = sum(int(__import__("numpy").prod(x.shape))
+                     for p, x in flat if any(
+                         getattr(e, "key", "") == "moe" for e in p))
+        n_active = n_total - expert * (1 - cfg.top_k / cfg.n_experts)
+    if shape.kind == "train":
+        toks = shape.global_batch * (shape.seq_len if cfg.family != "encdec"
+                                     else cfg.dec_ctx)
+        per_step = 6.0 * n_active * toks
+    elif shape.kind == "prefill":
+        toks = shape.global_batch * shape.seq_len
+        per_step = 2.0 * n_active * toks
+    else:  # decode: one token per sequence
+        per_step = 2.0 * n_active * shape.global_batch
+    return per_step / devices
+
+
+def wire_bytes(coll: dict[str, float]) -> float:
+    return sum(v * _WIRE_FACTOR.get(k, 1.0) for k, v in coll.items())
+
+
+def analyze_record(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    flops = rec["flops"]
+    t_c = flops / PEAK_FLOPS
+    t_m = rec["bytes_accessed"] / HBM_BW
+    wire = wire_bytes(rec.get("collective_bytes", {}))
+    t_x = wire / ICI_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    dom = max(terms, key=terms.get)
+    mf = model_flops_per_device(rec["arch"], rec["shape"], rec["devices"])
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "schedule": rec.get("schedule", ""), "tag": rec.get("tag", ""),
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "dominant": dom,
+        "model_flops": mf,
+        "useful_ratio": mf / flops if flops else float("nan"),
+        "lever": _LEVERS[dom],
+        "wire_bytes": wire,
+    }
+
+
+def load_all(path: pathlib.Path = RESULTS) -> list[dict]:
+    out = []
+    for f in sorted(path.glob("*.json")):
+        rec = json.loads(f.read_text())
+        r = analyze_record(rec)
+        if r:
+            out.append(r)
+    return out
+
+
+def table(rows: Iterable[dict]) -> str:
+    hdr = ("| arch | shape | mesh | sched | compute s | memory s | "
+           "collective s | dominant | MODEL/HLO |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['schedule']} | "
+            f"{r['compute_s']:.3e} | {r['memory_s']:.3e} | "
+            f"{r['collective_s']:.3e} | **{r['dominant']}** | "
+            f"{r['useful_ratio']:.3f} |")
+    return "\n".join(lines)
+
+
+def run() -> list[str]:
+    rows = load_all()
+    if not rows:
+        return ["roofline,no_dryrun_results_found_run_repro.launch.dryrun_first"]
+    out = []
+    for r in rows:
+        out.append(
+            f"roofline,{r['arch']},{r['shape']},{r['mesh']},{r['schedule']}"
+            f"{',' + r['tag'] if r['tag'] else ''},"
+            f"compute={r['compute_s']:.3e},memory={r['memory_s']:.3e},"
+            f"collective={r['collective_s']:.3e},dominant={r['dominant']},"
+            f"useful={r['useful_ratio']:.3f}")
+    return out
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

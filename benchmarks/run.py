@@ -1,0 +1,42 @@
+"""Benchmark entry point: one bench per paper table/figure + the coding-layer
+microbench + the roofline extraction.  Prints CSV-ish lines.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run table1 fig3
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+BENCHES = {
+    "table1": ("bench_runtime_model", "Sec VI-A tables (n=8 table + 2-3)"),
+    "stability": ("bench_stability", "Sec III-C/IV-A stability boundaries"),
+    "fig3": ("bench_fig3_sim", "Fig 3 runtime comparison (Monte-Carlo)"),
+    "auc": ("bench_auc", "Fig 4 AUC vs time"),
+    "throughput": ("bench_coding_throughput", "encode/decode microbench"),
+    "roofline": ("roofline", "roofline terms from dry-run artifacts"),
+}
+
+
+def main() -> None:
+    want = [a for a in sys.argv[1:] if a in BENCHES] or list(BENCHES)
+    failures = 0
+    for name in want:
+        mod_name, desc = BENCHES[name]
+        print(f"# --- {name}: {desc}", flush=True)
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+            for line in mod.run():
+                print(line, flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name},ERROR,{type(e).__name__}: {e}", flush=True)
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Quickstart: the paper's gradient coding end to end in ~60 lines.
+
+Builds a (d=3, s=1, m=2) code for n=4 workers, trains a small GQA
+transformer with the coded aggregation on a 4x2 host-device mesh, kills a
+random worker every step, and shows the update is identical to uncoded
+data-parallel training.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.core import make_code  # noqa: E402
+from repro.data import synthetic_lm_stream  # noqa: E402
+from repro.launch.mesh import make_local_mesh  # noqa: E402
+from repro.optim import get_optimizer  # noqa: E402
+from repro.train import Trainer  # noqa: E402
+
+
+def main() -> None:
+    n, d, s, m = 4, 3, 1, 2
+    code = make_code(n, d, s, m)
+    print(code.describe())
+    # -> each worker computes 3/4 of the data, sends l/2 floats, and the
+    #    master (here: every chip, SPMD) tolerates any 1 straggler.
+
+    cfg = get_config("qwen3-1.7b").reduced()   # 2-layer, d_model=256 smoke model
+    mesh = make_local_mesh(n_data=4, n_model=2)
+    trainer = Trainer(cfg, code, mesh,
+                      optimizer=get_optimizer("adamw", 3e-3),
+                      schedule="gather",          # paper-faithful decode
+                      straggler_mode="random")    # kill <= s workers per step
+    stream = synthetic_lm_stream(cfg, global_batch=8, seq_len=64)
+    logs = trainer.run(stream, steps=20, log_every=5)
+    print(f"\ncoded fraction of gradient bytes: {trainer.arts.coded_fraction:.3f}")
+    print(f"loss: {logs[0]['loss']:.3f} -> {logs[-1]['loss']:.3f} "
+          f"(with random stragglers every step)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Core gradient-coding library (the paper's contribution).
+
+Public API:
+  GradCode, make_code, uncoded      — code constructions (poly / random)
+  tradeoff                          — Theorem 1 feasibility helpers
+  runtime_model                     — Section VI shifted-exponential model
+  stability                         — Theorem 2 / condition-number machinery
+  coded_allreduce                   — JAX SPMD coded aggregation layer
+"""
+from . import coded_allreduce, cyclic, polynomial, random_code, runtime_model, stability, tradeoff
+from .schemes import GradCode, make_code, uncoded
+
+__all__ = [
+    "GradCode", "make_code", "uncoded",
+    "coded_allreduce", "cyclic", "polynomial", "random_code",
+    "runtime_model", "stability", "tradeoff",
+]

@@ -1,0 +1,173 @@
+"""Unified gradient-coding scheme object.
+
+``GradCode`` packages a code construction (polynomial / Gaussian-random) into
+the three artifacts the runtime needs:
+
+- ``C``: (n, d, m) per-worker encode coefficients.  Worker ``i`` transmits
+  ``f_i[v] = sum_{j<d, u<m} C[i, j, u] * g_{(i+j)%n}[v*m + u]`` — an
+  ``l/m``-dimensional vector (paper eq. 17/18 for the polynomial scheme,
+  eq. 25 for the random scheme).
+- ``decode_weights(responders)``: (n, m) float64 matrix ``W`` with zero rows at
+  stragglers such that ``sum_j g_j[v*m + u] = sum_i W[i, u] * f_i[v]`` for any
+  responder set of size >= n - s (paper eq. 19-21 / Section IV).
+- numpy reference ``encode`` / ``decode`` used as the oracle by every test and
+  by the Pallas-kernel ref checks.
+
+The master-side solve is done with SVD-backed lstsq in float64, matching the
+paper's remark that master-side reconstruction is off the hot path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import cached_property
+
+import numpy as np
+
+from . import cyclic, polynomial, random_code
+
+
+@dataclasses.dataclass(frozen=True)
+class GradCode:
+    """A (n, d, s, m) gradient code.  Requires d = s + m (optimal tradeoff)."""
+
+    n: int
+    d: int
+    s: int
+    m: int
+    kind: str = "poly"  # "poly" (Section III) | "random" (Theorem 2)
+    seed: int = 0       # for kind == "random"
+
+    def __post_init__(self):
+        if self.d != self.s + self.m:
+            raise ValueError(
+                f"optimal tradeoff requires d = s + m (paper eq. 5); "
+                f"got d={self.d}, s={self.s}, m={self.m}")
+        if not (1 <= self.d <= self.n and self.m >= 1 and self.s >= 0):
+            raise ValueError(f"invalid parameters {self}")
+        if self.kind not in ("poly", "random"):
+            raise ValueError(f"unknown scheme kind {self.kind!r}")
+
+    # ---------------------------------------------------------------- build
+    @cached_property
+    def V(self) -> np.ndarray:
+        """(n-s, n) evaluation matrix."""
+        if self.kind == "poly":
+            return polynomial.vandermonde(self.n, self.s)
+        return random_code.gaussian_V(self.n, self.s, self.seed)
+
+    @cached_property
+    def B(self) -> np.ndarray:
+        """(m*n, n-s) coding matrix."""
+        if self.kind == "poly":
+            return polynomial.build_B(self.n, self.d, self.s, self.m)
+        return random_code.build_B_from_V(self.n, self.d, self.m, self.V)
+
+    @cached_property
+    def C(self) -> np.ndarray:
+        """(n, d, m) encode coefficients, float64.
+
+        C[i, j, u] = p-block of dataset (i+j)%n, row u, evaluated at worker i
+        = (B @ V)[((i+j)%n)*m + u, i].
+        """
+        P = self.B @ self.V  # (m*n, n)
+        C = np.zeros((self.n, self.d, self.m), dtype=np.float64)
+        for i in range(self.n):
+            for j in range(self.d):
+                w = (i + j) % self.n
+                C[i, j, :] = P[w * self.m : (w + 1) * self.m, i]
+        return C
+
+    @cached_property
+    def assignment(self) -> np.ndarray:
+        """(n, n) bool: worker i holds subset j (cyclic window)."""
+        return cyclic.assignment_matrix(self.n, self.d)
+
+    def placement(self) -> np.ndarray:
+        """(n, d) subset ids per worker (for the data pipeline)."""
+        return cyclic.placement_indices(self.n, self.d)
+
+    # ---------------------------------------------------------------- decode
+    def decode_weights(self, responders: np.ndarray | list[int]) -> np.ndarray:
+        """(n, m) float64 W, zero rows at stragglers.
+
+        ``responders``: indices (or bool mask of length n) of workers whose
+        results arrived; must number at least n - s.
+        """
+        responders = np.asarray(responders)
+        if responders.dtype == bool:
+            responders = np.nonzero(responders)[0]
+        F = np.sort(responders)
+        if len(F) < self.n - self.s:
+            raise ValueError(
+                f"need >= n-s = {self.n - self.s} responders, got {len(F)}")
+        V_F = self.V[:, F]  # (n-s, |F|)
+        E = np.eye(self.n - self.s)[:, self.n - self.d :]  # (n-s, m)
+        if len(F) == self.n - self.s:
+            # square system: direct solve (paper eq. 21, A_F^{-1})
+            y = np.linalg.solve(V_F, E)
+        else:
+            # min-norm solution of V_F @ y = E (exact: V_F has full row rank)
+            y, *_ = np.linalg.lstsq(V_F, E, rcond=None)  # (|F|, m)
+        W = np.zeros((self.n, self.m), dtype=np.float64)
+        W[F] = y
+        return W
+
+    def reconstruction_condition_number(self, responders) -> float:
+        """cond(V_F V_F^T) — the quantity bounded by kappa in Theorem 2."""
+        responders = np.asarray(responders)
+        if responders.dtype == bool:
+            responders = np.nonzero(responders)[0]
+        V_F = self.V[:, np.sort(responders)]
+        return float(np.linalg.cond(V_F @ V_F.T))
+
+    # ------------------------------------------------------- numpy reference
+    def encode(self, G: np.ndarray) -> np.ndarray:
+        """Reference encoder.  G: (n, l) per-subset gradients -> F: (n, l/m).
+
+        Worker i only reads rows {i, .., i+d-1} (mod n) of G — the coefficient
+        tensor C is exactly zero elsewhere by construction.
+        """
+        n, l = G.shape
+        assert n == self.n and l % self.m == 0
+        Gr = G.reshape(n, l // self.m, self.m)
+        F = np.zeros((n, l // self.m), dtype=G.dtype)
+        for i in range(n):
+            rows = [(i + j) % n for j in range(self.d)]
+            # (d, l/m, m) x (d, m) -> (l/m)
+            F[i] = np.einsum("jvu,ju->v", Gr[rows], self.C[i])
+        return F
+
+    def decode(self, F: np.ndarray, responders) -> np.ndarray:
+        """Reference decoder.  F: (n, l/m) encodings -> (l,) sum gradient.
+
+        Straggler rows of F may contain garbage; W zeroes them out.
+        """
+        W = self.decode_weights(responders)  # (n, m)
+        decoded = np.einsum("nv,nu->vu", F, W)  # (l/m, m)
+        return decoded.reshape(-1)
+
+    # ----------------------------------------------------------------- misc
+    @property
+    def comm_fraction(self) -> float:
+        """Per-worker transmitted fraction of l (the paper's 1/m)."""
+        return 1.0 / self.m
+
+    def describe(self) -> str:
+        return (f"GradCode(kind={self.kind}, n={self.n}, d={self.d}, "
+                f"s={self.s}, m={self.m}) — each worker computes {self.d}/{self.n} "
+                f"of the data, sends l/{self.m}, tolerates any {self.s} stragglers")
+
+
+def make_code(n: int, d: int, s: int, m: int, kind: str | None = None,
+              seed: int = 0) -> GradCode:
+    """Factory with the paper's stability-driven default: polynomial
+    (Vandermonde) codes up to n = 20, Gaussian random codes beyond
+    (Sections III-C and IV-A)."""
+    if kind is None:
+        kind = "poly" if n <= 20 else "random"
+    return GradCode(n=n, d=d, s=s, m=m, kind=kind, seed=seed)
+
+
+def uncoded(n: int) -> GradCode:
+    """The naive scheme as the degenerate code (d=1, s=0, m=1)."""
+    return GradCode(n=n, d=1, s=0, m=1, kind="poly")

@@ -1,0 +1,5 @@
+from .pipeline import (CodedBatcher, make_synthetic_batch, synthetic_lm_stream,
+                       synthetic_logistic_dataset)
+
+__all__ = ["CodedBatcher", "make_synthetic_batch", "synthetic_lm_stream",
+           "synthetic_logistic_dataset"]

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the paper's per-step hot spots: coded encode
+(eq. 17/18) and coded decode (eq. 19-21), each with a pure-jnp oracle in
+ref.py and a jit'd wrapper in ops.py (interpret-mode on CPU)."""
+from . import ops, ref
+from .coded_decode import coded_decode
+from .coded_encode import coded_encode
+from .flash_attn import flash_attention, flash_attention_gqa
+
+__all__ = ["ops", "ref", "coded_encode", "coded_decode",
+           "flash_attention", "flash_attention_gqa"]

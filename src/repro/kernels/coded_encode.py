@@ -1,0 +1,79 @@
+"""Pallas TPU kernel: coded gradient ENCODE (paper eq. 17/18).
+
+The encode is the per-step device hot-spot the paper's scheme adds on the
+critical path between backprop and the collective: contract the worker's
+``(d, m)`` coefficient rows against the grouped gradient ``(d, V, m[, R])``
+to produce the ``(V[, R])`` transmitted vector.  Arithmetic intensity is
+low (~1 FLOP/byte) — a pure streaming kernel, so the design goal is VMEM
+tiling that keeps HBM traffic at exactly one read of G:
+
+- grid over V tiles (x R tiles when a trailing model-sharded dim exists),
+- each program loads the full (d, m) coefficient block (tiny) and a
+  (d, TV, m[, TR]) gradient tile into VMEM, contracts, writes (TV[, TR]),
+- tiles are multiples of (8, 128) in the last two dims for VPU lane/sublane
+  alignment; d and m stay unblocked (d, m <= 32 in practice).
+
+Validated against ref.coded_encode_ref in interpret mode (tests sweep
+shapes x dtypes); ops.py exposes the jit'd wrapper with interpret fallback
+on CPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _encode_kernel_2d(g_ref, c_ref, o_ref):
+    """g: (d, TV, m), c: (d, m), o: (TV,)."""
+    g = g_ref[...].astype(jnp.float32)          # (d, TV, m)
+    c = c_ref[...].astype(jnp.float32)          # (d, m)
+    o_ref[...] = jnp.einsum("jvu,ju->v", g, c).astype(o_ref.dtype)
+
+
+def _encode_kernel_3d(g_ref, c_ref, o_ref):
+    """g: (d, TV, m, TR), c: (d, m), o: (TV, TR)."""
+    g = g_ref[...].astype(jnp.float32)
+    c = c_ref[...].astype(jnp.float32)
+    o_ref[...] = jnp.einsum("jvur,ju->vr", g, c).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_v", "tile_r", "interpret"))
+def coded_encode(G: jax.Array, C: jax.Array, *, tile_v: int = 512,
+                 tile_r: int = 512, interpret: bool = False) -> jax.Array:
+    """G: (d, V, m) or (d, V, m, R); C: (d, m) -> (V,) or (V, R)."""
+    d, V, m = G.shape[:3]
+    tv = min(tile_v, V)
+    while V % tv:
+        tv -= 1
+    if G.ndim == 3:
+        grid = (V // tv,)
+        return pl.pallas_call(
+            _encode_kernel_2d,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((d, tv, m), lambda i: (0, i, 0)),
+                pl.BlockSpec((d, m), lambda i: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((tv,), lambda i: (i,)),
+            out_shape=jax.ShapeDtypeStruct((V,), G.dtype),
+            interpret=interpret,
+        )(G, C)
+    R = G.shape[3]
+    tr = min(tile_r, R)
+    while R % tr:
+        tr -= 1
+    grid = (V // tv, R // tr)
+    return pl.pallas_call(
+        _encode_kernel_3d,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((d, tv, m, tr), lambda i, j: (0, i, 0, j)),
+            pl.BlockSpec((d, m), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tv, tr), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((V, R), G.dtype),
+        interpret=interpret,
+    )(G, C)

@@ -1,0 +1,129 @@
+"""Pallas TPU kernel: flash attention forward (beyond-paper extension).
+
+Motivated by §Perf: the dominant memory-roofline term of every dense
+train_4k lowering was attention softmax traffic.  The JAX-level fix
+(`attn_remat`, EXPERIMENTS §Perf pair C) removes the stored residuals; this
+kernel is the TPU-native endpoint of the same idea — the (Sq x Sk) matrix
+never leaves VMEM at all.
+
+Design (MXU/VMEM-shaped):
+- grid (BH, nq, nk); the trailing kv axis is iterated sequentially on TPU,
+  so the running (m, l, acc) online-softmax state lives in VMEM scratch and
+  carries across kv blocks; outputs are written on the last kv step.
+- block shapes: q (1, bq, hd), k/v (1, bk, hd), out (1, bq, hd) with
+  bq, bk multiples of 128 for MXU alignment (hd = 64..256 in the zoo).
+- mask kinds: causal / full / sliding-window, computed from absolute block
+  offsets — no mask tensor is materialized anywhere.
+
+Validated in interpret mode against the pure-jnp online-softmax oracle
+(models.common.online_attention) over shape/dtype/mask sweeps
+(tests/test_kernels.py).  GQA is handled by the ops-level wrapper
+(kv heads broadcast per query group).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  bq: int, bk: int, nk: int, scale: float, mask_kind: str,
+                  window: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                 # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)                 # (bk, hd)
+    v = v_ref[0].astype(jnp.float32)
+    s = jnp.dot(q, k.T) * scale                      # (bq, bk)
+
+    qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    if mask_kind == "causal":
+        valid = kpos <= qpos
+    elif mask_kind == "window":
+        valid = (kpos <= qpos) & (kpos > qpos - window)
+    else:
+        valid = jnp.ones((bq, bk), bool)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]                              # (bq,)
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=1)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jnp.dot(p, v)
+    m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("mask_kind", "window",
+                                             "block_q", "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    mask_kind: str = "causal", window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q: (BH, Sq, hd); k/v: (BH, Sk, hd) -> (BH, Sq, hd).
+
+    The (Sq x Sk) score matrix exists only blockwise in VMEM.
+    """
+    BH, Sq, hd = q.shape
+    Sk = k.shape[1]
+    bq = min(block_q, Sq)
+    while Sq % bq:
+        bq -= 1
+    bk = min(block_k, Sk)
+    while Sk % bk:
+        bk -= 1
+    nq, nk = Sq // bq, Sk // bk
+    kern = functools.partial(
+        _flash_kernel, bq=bq, bk=bk, nk=nk, scale=1.0 / np.sqrt(hd),
+        mask_kind=mask_kind, window=window)
+    return pl.pallas_call(
+        kern,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def flash_attention_gqa(q: jax.Array, k: jax.Array, v: jax.Array,
+                        q_per_kv: int, **kw) -> jax.Array:
+    """Model-layout wrapper: q (B,S,H,hd), k/v (B,S,Hkv,hd) -> (B,S,H,hd)."""
+    B, Sq, H, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, hd)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), q_per_kv, axis=1) \
+        .reshape(B * H, Sk, hd)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), q_per_kv, axis=1) \
+        .reshape(B * H, Sk, hd)
+    out = flash_attention(qf, kf, vf, **kw)
+    return out.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,35 @@
+"""jit'd public wrappers for the Pallas kernels with automatic CPU fallback.
+
+On TPU the pallas_call lowers to Mosaic; on CPU (this container) we run the
+kernels in interpret mode for correctness, or fall back to the jnp oracle
+(ref.py) — selectable via ``mode``.
+"""
+from __future__ import annotations
+
+import jax
+
+from . import ref
+from .coded_decode import coded_decode
+from .coded_encode import coded_encode
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def encode(G: jax.Array, C: jax.Array, *, mode: str = "auto") -> jax.Array:
+    """Coded encode.  G: (d, V, m[, R]), C: (d, m) -> (V[, R])."""
+    if mode == "ref" or (mode == "auto" and not _on_tpu() and G.size > 1 << 22):
+        return (ref.coded_encode_ref if G.ndim == 3
+                else ref.coded_encode_batch_ref)(G, C)
+    interpret = mode == "interpret" or (mode == "auto" and not _on_tpu())
+    return coded_encode(G, C, interpret=interpret)
+
+
+def decode(F: jax.Array, W: jax.Array, *, mode: str = "auto") -> jax.Array:
+    """Coded decode.  F: (n, V[, R]), W: (n, m) -> (V, m[, R])."""
+    if mode == "ref" or (mode == "auto" and not _on_tpu() and F.size > 1 << 22):
+        return (ref.coded_decode_ref if F.ndim == 2
+                else ref.coded_decode_batch_ref)(F, W)
+    interpret = mode == "interpret" or (mode == "auto" and not _on_tpu())
+    return coded_decode(F, W, interpret=interpret)

@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for the Pallas kernels.  These are the ground truth every
+kernel test asserts against (and double as the CPU fallback path)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def coded_encode_ref(G: jnp.ndarray, C: jnp.ndarray) -> jnp.ndarray:
+    """Fold d subset-gradient rows into one l/m encoding (paper eq. 17/18).
+
+    G: (d, V, m)  — grouped gradient tiles (V = l/m groups of m coords)
+    C: (d, m)     — the worker's coefficient rows C[i, j, :]
+    returns (V,)  — the transmitted vector f_i
+    """
+    return jnp.einsum("jvu,ju->v", G.astype(jnp.float32),
+                      C.astype(jnp.float32)).astype(G.dtype)
+
+
+def coded_decode_ref(F: jnp.ndarray, W: jnp.ndarray) -> jnp.ndarray:
+    """Reconstruct the summed gradient from worker encodings (eq. 19-21).
+
+    F: (n, V)   — one l/m-dim encoding per worker (straggler rows garbage)
+    W: (n, m)   — decode weights, zero rows at stragglers
+    returns (V, m) — decoded groups; caller reshapes to (l,)
+    """
+    return jnp.einsum("nv,nu->vu", F.astype(jnp.float32),
+                      W.astype(jnp.float32)).astype(F.dtype)
+
+
+def coded_encode_batch_ref(G: jnp.ndarray, C: jnp.ndarray) -> jnp.ndarray:
+    """Encode with a trailing model dim: G (d, V, m, R), C (d, m) -> (V, R)."""
+    return jnp.einsum("jvur,ju->vr", G.astype(jnp.float32),
+                      C.astype(jnp.float32)).astype(G.dtype)
+
+
+def coded_decode_batch_ref(F: jnp.ndarray, W: jnp.ndarray) -> jnp.ndarray:
+    """Decode with a trailing model dim: F (n, V, R), W (n, m) -> (V, m, R)."""
+    return jnp.einsum("nvr,nu->vur", F.astype(jnp.float32),
+                      W.astype(jnp.float32)).astype(F.dtype)

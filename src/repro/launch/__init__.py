@@ -1,0 +1,6 @@
+from .mesh import (data_axes_of, data_degree, make_local_mesh,
+                   make_production_mesh)
+from .shapes import SHAPES, InputShape, applicability
+
+__all__ = ["make_production_mesh", "make_local_mesh", "data_axes_of",
+           "data_degree", "SHAPES", "InputShape", "applicability"]

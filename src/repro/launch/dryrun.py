@@ -1,0 +1,146 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver (deliverable e).
+
+Lowers + compiles every requested (arch x input shape) on the production
+mesh(es) with ShapeDtypeStruct stand-ins (no allocation), records
+memory_analysis / cost_analysis / the collective-bytes breakdown, and writes
+one JSON per combination under results/dryrun/.
+
+The XLA_FLAGS line above MUST run before any other import (jax locks the
+device count on first init); do not set it globally — smoke tests and
+benches must see 1 device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b \
+      --shape train_4k --mesh single --schedule gather
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse      # noqa: E402
+import json          # noqa: E402
+import pathlib       # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs import ARCHS                     # noqa: E402
+from repro.launch import lowering                   # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.shapes import SHAPES              # noqa: E402
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def run_one(arch: str, shape: str, mesh_name: str, schedule: str,
+            out_dir: pathlib.Path, code_spec: str | None = None,
+            tag: str = "", opt: str = "") -> dict:
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+           "schedule": schedule, "devices": int(mesh.size), "tag": tag,
+           "opt": opt}
+    kw = {}
+    opts = set((opt or "").split(",")) - {""}
+    if "attn_remat" in opts:
+        from repro.models import common as _cm
+        _cm.REMAT_KV_STEP = True
+    if "moe_einsum" in opts:
+        from repro.models import moe as _moe
+        _moe.DISPATCH = "einsum"
+    if "enc_constraint" in opts:
+        from repro.train import coded_step as _cs
+        _cs.ENC_CONSTRAINT = True
+    if SHAPES[shape].kind == "train":
+        kw["schedule"] = schedule
+        if "bf16_wire" in opts:
+            kw["encode_dtype"] = "bfloat16"
+        if code_spec:
+            d, s, m = (int(x) for x in code_spec.split(","))
+            from repro.launch.mesh import data_degree
+            from repro.core import make_code
+            kw["code"] = make_code(data_degree(mesh), d, s, m)
+    try:
+        fn, args, meta = lowering.build_lowering(arch, shape, mesh, **kw)
+    except lowering.SkipLowering as e:
+        rec.update(status="skipped", reason=str(e))
+        return rec
+    with jax.sharding.set_mesh(mesh):
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    from repro.launch import hlo_cost
+    hlo = hlo_cost.analyze(compiled.as_text())
+    rec.update(
+        status="ok", meta=meta,
+        lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+        memory=({k: int(getattr(mem, k)) for k in (
+            "argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes")}
+            if mem is not None else None),
+        # raw XLA numbers (scan bodies counted once — see hlo_cost docstring)
+        xla_flops_once=float(cost.get("flops", -1.0)) if cost else None,
+        xla_bytes_once=float(cost.get("bytes accessed", -1.0)) if cost else None,
+        # loop-aware numbers used by §Roofline
+        flops=hlo["flops"],
+        bytes_accessed=hlo["bytes_accessed"],
+        collective_bytes=hlo["collective_bytes"],
+        collective_counts=hlo["collective_counts"],
+    )
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=ARCHS + ["all"],
+                    help="architecture id (or 'all')")
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + ["all"])
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--schedule", default="gather",
+                    choices=["gather", "a2a", "psum"])
+    ap.add_argument("--code", default=None,
+                    help="d,s,m triple for the gradient code (default 3,1,2)")
+    ap.add_argument("--opt", default="",
+                    help="comma list of perf levers: attn_remat, bf16_wire")
+    ap.add_argument("--tag", default="", help="tag for the result filename")
+    ap.add_argument("--all", action="store_true",
+                    help="sweep all arch x shape combos")
+    ap.add_argument("--out", default=str(RESULTS))
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    archs = ARCHS if (args.all or args.arch in (None, "all")) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape in (None, "all")) \
+        else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_name in meshes:
+                name = f"{arch}__{shape}__{mesh_name}__{args.schedule}"
+                if args.tag:
+                    name += f"__{args.tag}"
+                t0 = time.time()
+                try:
+                    rec = run_one(arch, shape, mesh_name, args.schedule,
+                                  out_dir, args.code, args.tag, args.opt)
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                           "schedule": args.schedule, "status": "error",
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-4000:]}
+                    failures += 1
+                rec["wall_s"] = round(time.time() - t0, 1)
+                (out_dir / f"{name}.json").write_text(json.dumps(rec, indent=1))
+                print(f"{name}: {rec['status']} ({rec['wall_s']}s)", flush=True)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

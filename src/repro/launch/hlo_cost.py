@@ -1,0 +1,329 @@
+"""Loop-aware HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` counts every computation ONCE — a scan
+(while) body's FLOPs are not multiplied by the trip count, which silently
+undercounts scan-over-layers models by ~L x and hides collectives inside
+scanned layers (e.g. GSPMD all-to-alls in a scanned MoE block).  This module
+re-derives the roofline inputs from ``compiled.as_text()``:
+
+- parses computations + the call graph (while/fusion/call/cond),
+- multiplies by ``backend_config={"known_trip_count": ...}`` for whiles,
+- FLOPs from ``dot`` ops (2 * prod(out) * prod(contracting dims)),
+- HBM-ish bytes from fusion/dot/copy/collective operand+result sizes,
+- collective bytes bucketed by op kind.
+
+This is textual analysis — shapes and call structure are exact; the bytes
+term approximates "each op reads its operands and writes its result once".
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8, "s32": 4,
+    "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "f8": 1,
+    "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8\w*|s64|u64|s32|u32|s16|u16|s8|u8|s4|u4|pred)\[([\d,]*)\]")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(")
+_CALL_RE = re.compile(r"(?:body|condition|to_apply|calls|branch_computations)=\{?%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[\\\"={:]+n[\\\"]*:?[\\\"]*(\d+)')
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_BATCH_RE = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
+_OPERANDS_RE = re.compile(r"%([\w.\-]+)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all")
+
+
+def _shape_bytes_elems(type_str: str) -> tuple[int, int]:
+    """Total (bytes, elements) over every array in a (possibly tuple) type."""
+    bts = elems = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        b = _DTYPE_BYTES.get(dt, 1 if dt.startswith("f8") else 4)
+        bts += n * b
+        elems += n
+    return bts, elems
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+@dataclasses.dataclass
+class OpInfo:
+    name: str
+    result_type: str
+    opcode: str
+    line: str
+    callees: list[str]
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list[OpInfo]
+    defs: dict[str, str]     # op name -> result type string
+
+
+def parse_computations(text: str) -> tuple[dict[str, Computation], str]:
+    comps: dict[str, Computation] = {}
+    entry = ""
+    cur: Computation | None = None
+    for line in text.splitlines():
+        if line.startswith("HloModule"):
+            continue
+        if not line.startswith(" ") and "{" in line and ("->" in line or line.startswith("ENTRY")):
+            is_entry = line.startswith("ENTRY")
+            name_m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)", line)
+            if name_m:
+                cur = Computation(name_m.group(1), [], {})
+                comps[cur.name] = cur
+                if is_entry:
+                    entry = cur.name
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            # parameters: "%p = f32[..] parameter(0)" matches _OP_RE; others skip
+            continue
+        name, rtype, opcode = m.group(1), m.group(2), m.group(3)
+        callees = _CALL_RE.findall(line)
+        cur.ops.append(OpInfo(name, rtype, opcode, line, callees))
+        cur.defs[name] = rtype
+    return comps, entry
+
+
+def _multipliers(comps: dict[str, Computation], entry: str
+                 ) -> tuple[dict[str, float], set[str]]:
+    """Call-count multiplier per computation + the set of computations that
+    live inside a fusion body (register-level — their ops do not touch HBM)."""
+    mult: dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    fused: set[str] = set()
+    pending = [entry]
+    while pending:
+        cname = pending.pop()
+        cm = mult[cname]
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        for op in comp.ops:
+            if not op.callees:
+                continue
+            factor = 1.0
+            if op.opcode == "while":
+                tm = _TRIP_RE.search(op.line)
+                factor = float(tm.group(1)) if tm else 1.0
+            inside_fusion = (op.opcode in ("fusion", "reduce", "map", "sort",
+                                           "scatter", "reduce-window")
+                             or cname in fused)
+            for callee in op.callees:
+                if callee in comps:
+                    before = mult[callee]
+                    mult[callee] += cm * factor
+                    if inside_fusion:
+                        fused.add(callee)
+                    if mult[callee] != before or (inside_fusion
+                                                  and callee not in fused):
+                        pending.append(callee)
+    # propagate fusion membership transitively
+    changed = True
+    while changed:
+        changed = False
+        for cname, comp in comps.items():
+            if cname not in fused:
+                continue
+            for op in comp.ops:
+                for callee in op.callees:
+                    if callee in comps and callee not in fused:
+                        fused.add(callee)
+                        changed = True
+    return dict(mult), fused
+
+
+def _dot_flops(op: OpInfo, comp: Computation) -> float:
+    out_dims = _shape_dims(op.result_type)
+    out_elems = 1
+    for d in out_dims:
+        out_elems *= d
+    cm = _CONTRACT_RE.search(op.line)
+    # operands appear after the opcode paren
+    tail = op.line.split(op.opcode + "(", 1)[1]
+    operand_names = _OPERANDS_RE.findall(tail.split(")")[0])
+    contract = 1
+    if cm and operand_names:
+        lhs_type = comp.defs.get(operand_names[0], "")
+        lhs_dims = _shape_dims(lhs_type)
+        if cm.group(1):
+            for idx in cm.group(1).split(","):
+                i = int(idx)
+                if i < len(lhs_dims):
+                    contract *= lhs_dims[i]
+    return 2.0 * out_elems * contract
+
+
+_BYTES_OPS = ("fusion", "dot", "copy", "convolution", "scatter", "gather",
+              "dynamic-update-slice", "dynamic-slice", "reduce", "transpose",
+              "broadcast", "iota", "compare", "select", "add", "multiply",
+              "subtract", "divide", "exponential", "tanh", "convert", "sort",
+              "concatenate", "reshape", "slice", "pad", "reverse", "rsqrt",
+              "log", "maximum", "minimum", "negate", "power", "sqrt",
+              "reduce-window", "map", "clamp", "and", "or", "xor", "not")
+
+# ops that read only an output-sized window of their (possibly huge) operand
+_SLICE_LIKE = ("dynamic-slice", "slice", "gather")
+
+
+def _operand_names(op: OpInfo) -> list[str]:
+    tail = op.line.split(op.opcode + "(", 1)
+    if len(tail) != 2:
+        return []
+    return _OPERANDS_RE.findall(tail[1].split(")")[0])
+
+
+def _param_slice_bytes(comps: dict[str, Computation], callee: str,
+                       k: int) -> float | None:
+    """Bytes actually read from parameter k of ``callee``:
+    - consumed only by slice-like ops -> summed consumer-output bytes,
+    - consumed as the *target buffer* (operand 0) of a dynamic-update-slice
+      -> 0 (aliased in-place write; only the window moves),
+    - anything else -> None (full operand is read)."""
+    comp = comps.get(callee)
+    if comp is None:
+        return None
+    pname = None
+    for op in comp.ops:
+        if op.opcode == "parameter" and f"parameter({k})" in op.line:
+            pname = op.name
+            break
+    if pname is None:
+        return None
+    total = 0.0
+    for op in comp.ops:
+        if op.opcode == "parameter":
+            continue
+        if f"%{pname}" in op.line.split("=", 1)[-1]:
+            if op.opcode in _SLICE_LIKE:
+                b, _ = _shape_bytes_elems(op.result_type)
+                total += b
+            elif op.opcode == "dynamic-update-slice":
+                ops_ = _operand_names(op)
+                if ops_ and ops_[0] == pname:
+                    continue                       # aliased target buffer
+                return None
+            else:
+                return None
+    return total
+
+
+def _follow(comp: Computation, name: str, depth: int = 4) -> OpInfo | None:
+    """Follow bitcast/reshape/copy chains to the producing op."""
+    by_name = {op.name: op for op in comp.ops}
+    op = by_name.get(name)
+    for _ in range(depth):
+        if op is None or op.opcode not in ("bitcast", "reshape", "copy",
+                                           "transpose", "convert"):
+            return op
+        ops_ = _operand_names(op)
+        op = by_name.get(ops_[0]) if ops_ else None
+    return op
+
+
+def _fusion_output_bytes(comps: dict[str, Computation], callee: str,
+                         out_b: float) -> float:
+    """If the fusion's root is a dynamic-update-slice (possibly behind a
+    bitcast), only the update window is written, not the whole buffer."""
+    comp = comps.get(callee)
+    if comp is None:
+        return out_b
+    root = next((op for op in comp.ops if "ROOT" in op.line.split("=", 1)[0]
+                 or op.line.lstrip().startswith("ROOT")), None)
+    if root is None:
+        return out_b
+    op = root
+    if op.opcode in ("bitcast", "reshape", "copy", "transpose", "convert"):
+        ops_ = _operand_names(op)
+        op = _follow(comp, ops_[0]) if ops_ else None
+    if op is not None and op.opcode == "dynamic-update-slice":
+        ops_ = _operand_names(op)
+        if len(ops_) > 1:
+            src = _follow(comp, ops_[1])
+            ub, _ = _shape_bytes_elems(
+                comp.defs.get(src.name if src else ops_[1], ""))
+            if ub:
+                return ub
+    return out_b
+
+
+def _op_bytes(op: OpInfo, comp: Computation,
+              comps: dict[str, Computation]) -> float:
+    out_b, _ = _shape_bytes_elems(op.result_type)
+    operands = _operand_names(op)
+    if op.opcode in _SLICE_LIKE:
+        return 2.0 * out_b                      # read a window, write it
+    if op.opcode == "dynamic-update-slice":
+        upd = operands[1] if len(operands) > 1 else None
+        ub, _ = _shape_bytes_elems(comp.defs.get(upd, "")) if upd else (out_b, 0)
+        return 2.0 * ub                         # read update, write window
+    if op.opcode == "fusion":
+        callee = op.callees[0] if op.callees else None
+        total = _fusion_output_bytes(comps, callee, out_b) if callee else out_b
+        for k, nm in enumerate(operands):
+            full, _ = _shape_bytes_elems(comp.defs.get(nm, ""))
+            sliced = _param_slice_bytes(comps, callee, k) if callee else None
+            total += min(full, sliced) if sliced is not None else full
+        return total
+    in_b = 0.0
+    for nm in operands:
+        ib, _ = _shape_bytes_elems(comp.defs.get(nm, ""))
+        in_b += ib
+    return out_b + in_b
+
+
+def analyze(text: str) -> dict:
+    comps, entry = parse_computations(text)
+    mult, fused = _multipliers(comps, entry)
+    flops = 0.0
+    bytes_accessed = 0.0
+    coll: dict[str, float] = defaultdict(float)
+    coll_count: dict[str, int] = defaultdict(int)
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        in_fusion = cname in fused
+        for op in comp.ops:
+            oc = op.opcode
+            if oc == "dot":
+                flops += m * _dot_flops(op, comp)   # FLOPs count even in fusions
+            if in_fusion:
+                continue                            # register traffic, not HBM
+            if oc in COLLECTIVES:
+                b, _ = _shape_bytes_elems(op.result_type)
+                coll[oc] += m * b
+                coll_count[oc] += int(m)
+            if oc in _BYTES_OPS or oc in COLLECTIVES:
+                bytes_accessed += m * _op_bytes(op, comp, comps)
+    return {
+        "flops": flops,
+        "bytes_accessed": bytes_accessed,
+        "collective_bytes": dict(coll),
+        "collective_counts": dict(coll_count),
+        "n_computations": len(comps),
+    }

@@ -1,0 +1,10 @@
+"""Model zoo: dense GQA transformer, MoE, xLSTM, Mamba2-hybrid, enc-dec
+(whisper), VLM (internvl), linear (the paper's logistic workload)."""
+from . import api, common, dense, encdec, linear, mamba_hybrid, moe, vlm, xlstm
+from .api import get_module, init, make_decode, make_loss, make_prefill, cache_spec
+
+__all__ = [
+    "api", "common", "dense", "encdec", "linear", "mamba_hybrid", "moe",
+    "vlm", "xlstm", "get_module", "init", "make_decode", "make_loss",
+    "make_prefill", "cache_spec",
+]

@@ -1,0 +1,357 @@
+"""Shared model components: norms, RoPE, GQA attention (full / KV-cache /
+sliding-window), SwiGLU MLP, losses, and scan-over-layers helpers.
+
+Conventions
+-----------
+- Params are plain nested dicts of jnp arrays; layer stacks carry a leading
+  ``L`` axis and are consumed by ``jax.lax.scan`` (remat'd) so the HLO stays
+  small for 88-layer configs under 512 fake devices.
+- ``cfg.compute_dtype`` is used for activations; params stay in
+  ``cfg.param_dtype``.  Logits / losses are computed in float32.
+- KV caches are dicts ``{"k": (L, B, S, Hkv, hd), "v": ..., "pos": ()}``; the
+  sliding-window variant stores a ring buffer of size ``cfg.sliding_window``.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def cdtype(cfg):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def pdtype(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ------------------------------------------------------------------ norms
+def rms_norm(x: jax.Array, gain: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    scale = jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (x32 * scale).astype(x.dtype) * gain.astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, gain: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * gain.astype(x.dtype) + bias.astype(x.dtype)
+
+
+# ------------------------------------------------------------------- RoPE
+def rope_freqs(hd: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, hd, 2, dtype=np.float64) / hd))
+
+
+def apply_rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd), pos: (..., S) int -> rotated x (same dtype)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta), jnp.float32)          # (hd/2,)
+    ang = pos.astype(jnp.float32)[..., None] * freqs                 # (..., S, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------- init
+def dense_init(key, shape, in_axis_size, dtype):
+    scale = 1.0 / np.sqrt(in_axis_size)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def attn_params(key, cfg, dtype) -> dict:
+    D, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (D, H, hd), D, dtype),
+        "wk": dense_init(ks[1], (D, Hkv, hd), D, dtype),
+        "wv": dense_init(ks[2], (D, Hkv, hd), D, dtype),
+        "wo": dense_init(ks[3], (H, hd, D), H * hd, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), dtype)
+        p["bk"] = jnp.zeros((Hkv, hd), dtype)
+        p["bv"] = jnp.zeros((Hkv, hd), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def mlp_params(key, cfg, dtype, d_ff=None) -> dict:
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], (D, F), D, dtype),
+        "w_up": dense_init(ks[1], (D, F), D, dtype),
+        "w_down": dense_init(ks[2], (F, D), F, dtype),
+    }
+
+
+# -------------------------------------------------------------- attention
+def qkv_project(p: dict, cfg, x: jax.Array, pos: jax.Array):
+    """x: (B, S, D) -> q (B,S,H,hd), k/v (B,S,Hkv,hd) with bias/qk_norm/rope."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_scores_attend(q, k, v, mask, q_per_kv: int):
+    """q: (B,Sq,H,hd), k/v: (B,Sk,Hkv,hd), mask: (B,Sq,Sk) or (Sq,Sk) bool."""
+    B, Sq, H, hd = q.shape
+    Hkv = k.shape[2]
+    qg = q.reshape(B, Sq, Hkv, q_per_kv, hd)
+    logits = jnp.einsum("bqhgk,bshk->bhgqs", qg, k).astype(jnp.float32)
+    logits = logits / np.sqrt(hd)
+    if mask.ndim == 2:
+        mask = mask[None]
+    logits = jnp.where(mask[:, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgqs,bshk->bqhgk", probs, v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def attention(p: dict, cfg, x: jax.Array, pos: jax.Array,
+              mask: jax.Array) -> jax.Array:
+    """Full (training / prefill) self-attention.  x: (B, S, D)."""
+    q, k, v = qkv_project(p, cfg, x, pos)
+    out = gqa_scores_attend(q, k, v, mask, cfg.q_per_kv)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+# ----------------------------------------------- chunked (online-softmax)
+CHUNK_THRESHOLD = 2048  # switch to the chunked path above this seq length
+CHUNK_Q = 256
+CHUNK_KV = 1024
+
+# §Perf lever: remat the kv-chunk body so backward recomputes the softmax
+# probabilities per chunk instead of storing the full (Sq x Sk) p residuals
+# (flash-attention-style memory behaviour).  Default False = the recorded
+# baseline; flipped by the dry-run's --opt attn_remat and by EXPERIMENTS
+# §Perf iteration 1.
+REMAT_KV_STEP = False
+
+
+def online_attention(q, k, v, q_per_kv: int, *, mask_kind: str = "causal",
+                     window: int = 0, chunk_q: int = CHUNK_Q,
+                     chunk_kv: int = CHUNK_KV, kv_pos0: int = 0) -> jax.Array:
+    """Flash-style attention in pure JAX: never materializes (Sq, Sk).
+
+    q: (B, Sq, H, hd); k/v: (B, Sk, Hkv, hd).
+    mask_kind: "causal" | "full" | "window" (causal with a back-window).
+    Query positions are ``kv_pos0 + arange(Sq)`` relative to kv positions
+    ``arange(Sk)`` (self-attention uses kv_pos0=Sk-Sq=0).
+    Memory per step: O(B * chunk_q * H * chunk_kv).
+    """
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    Hkv = k.shape[2]
+    cq = min(chunk_q, Sq)
+    while Sq % cq:
+        cq -= 1
+    ckv = min(chunk_kv, Sk)
+    while Sk % ckv:
+        ckv -= 1
+    nq, nk = Sq // cq, Sk // ckv
+    scale = 1.0 / np.sqrt(hd)
+    qr = q.reshape(B, nq, cq, Hkv, q_per_kv, hd)
+    kr = k.reshape(B, nk, ckv, Hkv, hd)
+    vr = v.reshape(B, nk, ckv, Hkv, hd)
+
+    def q_block(qi_qc):
+        qi, qc = qi_qc                     # qc: (B, cq, Hkv, g, hd)
+        qpos = kv_pos0 + qi * cq + jnp.arange(cq)
+
+        def kv_step(carry, kj_kc):
+            m_acc, l_acc, o_acc = carry
+            kj, kc, vc = kj_kc
+            kpos = kj * ckv + jnp.arange(ckv)
+            s = jnp.einsum("bqhgk,bshk->bhgqs", qc, kc).astype(jnp.float32) * scale
+            if mask_kind == "causal":
+                valid = kpos[None, :] <= qpos[:, None]
+            elif mask_kind == "window":
+                valid = (kpos[None, :] <= qpos[:, None]) & \
+                        (kpos[None, :] > qpos[:, None] - window)
+            else:
+                valid = jnp.ones((cq, ckv), bool)
+            s = jnp.where(valid[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m_acc, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_acc - m_new)
+            l_new = l_acc * corr + p.sum(-1)
+            o_new = o_acc * corr[..., None] + jnp.einsum(
+                "bhgqs,bshk->bhgqk", p.astype(qc.dtype), vc).astype(jnp.float32)
+            return (m_new, l_new, o_new), None
+
+        m0 = jnp.full((B, Hkv, q_per_kv, cq), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, q_per_kv, cq), jnp.float32)
+        o0 = jnp.zeros((B, Hkv, q_per_kv, cq, hd), jnp.float32)
+        body = jax.remat(kv_step) if REMAT_KV_STEP else kv_step
+        (m, l, o), _ = jax.lax.scan(
+            body, (m0, l0, o0),
+            (jnp.arange(nk), jnp.moveaxis(kr, 1, 0), jnp.moveaxis(vr, 1, 0)))
+        o = o / jnp.maximum(l, 1e-30)[..., None]
+        return jnp.einsum("bhgqk->bqhgk", o)
+
+    blocks = jax.lax.map(q_block, (jnp.arange(nq), jnp.moveaxis(qr, 1, 0)))
+    out = jnp.moveaxis(blocks, 0, 1).reshape(B, Sq, Hkv, q_per_kv, hd)
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def self_attention(p: dict, cfg, x: jax.Array, pos: jax.Array, *,
+                   mask_kind: str = "causal", window: int = 0) -> jax.Array:
+    """Mask-kind self-attention that picks the materialized path for short
+    sequences and the chunked online-softmax path for long ones."""
+    B, S, _ = x.shape
+    q, k, v = qkv_project(p, cfg, x, pos)
+    if S <= CHUNK_THRESHOLD:
+        if mask_kind == "causal":
+            mask = causal_mask(S)
+        elif mask_kind == "window":
+            mask = sliding_causal_mask(S, window)
+        else:
+            mask = jnp.ones((S, S), bool)
+        out = gqa_scores_attend(q, k, v, mask, cfg.q_per_kv)
+    else:
+        out = online_attention(q, k, v, cfg.q_per_kv, mask_kind=mask_kind,
+                               window=window)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+def self_attention_with_kv(p: dict, cfg, x: jax.Array, pos: jax.Array, *,
+                           mask_kind: str = "causal", window: int = 0):
+    """Like self_attention but also returns (k, v) for prefill caching."""
+    B, S, _ = x.shape
+    q, k, v = qkv_project(p, cfg, x, pos)
+    if S <= CHUNK_THRESHOLD:
+        if mask_kind == "causal":
+            mask = causal_mask(S)
+        elif mask_kind == "window":
+            mask = sliding_causal_mask(S, window)
+        else:
+            mask = jnp.ones((S, S), bool)
+        out = gqa_scores_attend(q, k, v, mask, cfg.q_per_kv)
+    else:
+        out = online_attention(q, k, v, cfg.q_per_kv, mask_kind=mask_kind,
+                               window=window)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, k, v
+
+
+def causal_mask(S: int) -> jax.Array:
+    return jnp.tril(jnp.ones((S, S), bool))
+
+
+def sliding_causal_mask(S: int, window: int) -> jax.Array:
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    return (j <= i) & (j > i - window)
+
+
+# ------------------------------------------------------- KV-cache decoding
+def attention_decode(p: dict, cfg, x: jax.Array, k_cache, v_cache,
+                     pos: jax.Array, *, window: int = 0):
+    """One-token decode.  x: (B, 1, D); k/v_cache: (B, S, Hkv, hd) already
+    containing this step's k/v is returned updated.
+
+    ``window == 0``: dense cache of length S (pos indexes absolutely).
+    ``window  > 0``: ring buffer of length ``window`` (pos % window slot).
+    """
+    B = x.shape[0]
+    q, k, v = qkv_project(p, cfg, x, jnp.broadcast_to(pos, (B, 1)))
+    S = k_cache.shape[1]
+    slot = (pos % S) if window else pos
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, slot, axis=1)  # noqa: broadcast over B
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, slot, axis=1)
+    j = jnp.arange(S)
+    if window:
+        valid = (j <= pos % S) | (pos >= S)          # ring buffer fullness
+    else:
+        valid = j <= pos
+    mask = jnp.broadcast_to(valid[None, None, :], (B, 1, S))
+    out = gqa_scores_attend(q, k_cache, v_cache, mask, cfg.q_per_kv)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, k_cache, v_cache
+
+
+def pack_cache(k: jax.Array, slots: int, window: int) -> jax.Array:
+    """Place prefill-time keys/values (B, S, H, hd), ordered by position,
+    into a cache of ``slots`` entries so that ``attention_decode``'s slot
+    arithmetic (``pos`` for dense, ``pos % slots`` for ring) lines up.
+
+    - dense (window == 0): position p lives at slot p; requires S <= slots,
+      padded with zeros at the end.
+    - ring (window > 0, slots == window): position p lives at slot p % slots;
+      keep the last ``slots`` positions and roll them into place.
+    """
+    B, S = k.shape[:2]
+    if S <= slots:
+        pad = slots - S
+        return jnp.pad(k, ((0, 0), (0, pad)) + ((0, 0),) * (k.ndim - 2))
+    if not window:
+        raise ValueError(f"dense cache too small: S={S} > slots={slots}")
+    last = k[:, S - slots:]
+    return jnp.roll(last, S % slots, axis=1)
+
+
+# ------------------------------------------------------------------- MLP
+def swiglu(p: dict, x: jax.Array) -> jax.Array:
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype))
+    return jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u, p["w_down"].astype(x.dtype))
+
+
+# ------------------------------------------------------------------ loss
+def softmax_xent(logits: jax.Array, labels: jax.Array,
+                 mask: jax.Array | None = None) -> jax.Array:
+    """Mean next-token cross-entropy in float32.  logits: (..., V)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - ll
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+# -------------------------------------------------- scan-over-layers glue
+def stacked_init(per_layer_init, key, n_layers: int):
+    """vmap a single-layer init over a leading L axis."""
+    keys = jax.random.split(key, n_layers)
+    return jax.vmap(per_layer_init)(keys)
+
+
+def scan_layers(body, x, stacked_params, *extra):
+    """Remat'd scan of ``body(x, layer_params, *extra) -> x`` over the stack."""
+    def step(carry, lp):
+        return jax.remat(body)(carry, lp, *extra), None
+    out, _ = jax.lax.scan(step, x, stacked_params)
+    return out
+
+
+def embed_tokens(emb: jax.Array, tokens: jax.Array, dtype) -> jax.Array:
+    return emb.astype(dtype)[tokens]
+
+
+def unembed(x: jax.Array, emb_out: jax.Array) -> jax.Array:
+    return jnp.einsum("bsd,dv->bsv", x, emb_out.astype(x.dtype))

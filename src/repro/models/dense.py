@@ -1,0 +1,129 @@
+"""Dense decoder-only transformer LM (llama/qwen family): GQA + SwiGLU,
+scan-over-layers with remat, KV-cache serving (dense or sliding-window)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common as cm
+
+
+# ------------------------------------------------------------------- init
+def init(key, cfg):
+    kl, ke, ko = jax.random.split(key, 3)
+    dt = cm.pdtype(cfg)
+
+    def layer_init(k):
+        ka, km = jax.random.split(k)
+        return {
+            "ln1": jnp.ones((cfg.d_model,), dt),
+            "attn": cm.attn_params(ka, cfg, dt),
+            "ln2": jnp.ones((cfg.d_model,), dt),
+            "mlp": cm.mlp_params(km, cfg, dt),
+        }
+
+    return {
+        "embed": cm.dense_init(ke, (cfg.vocab, cfg.d_model), cfg.d_model, dt),
+        "layers": cm.stacked_init(layer_init, kl, cfg.n_layers),
+        "ln_f": jnp.ones((cfg.d_model,), dt),
+        "unembed": cm.dense_init(ko, (cfg.d_model, cfg.vocab), cfg.d_model, dt),
+    }
+
+
+# ---------------------------------------------------------------- forward
+def _block(x, lp, cfg, pos, mask_kind, window):
+    x = x + cm.self_attention(lp["attn"], cfg, cm.rms_norm(x, lp["ln1"]), pos,
+                              mask_kind=mask_kind, window=window)
+    x = x + cm.swiglu(lp["mlp"], cm.rms_norm(x, lp["ln2"]))
+    return x
+
+
+def forward(params, cfg, tokens, *, window: int = 0):
+    """tokens: (B, S) -> logits (B, S, V)."""
+    B, S = tokens.shape
+    x = cm.embed_tokens(params["embed"], tokens, cm.cdtype(cfg))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    mk = "window" if window else "causal"
+    x = cm.scan_layers(lambda h, lp: _block(h, lp, cfg, pos, mk, window),
+                       x, params["layers"])
+    x = cm.rms_norm(x, params["ln_f"])
+    return cm.unembed(x, params["unembed"])
+
+
+def loss(params, cfg, batch):
+    """batch: {"tokens": (B, S), "labels": (B, S)} -> mean xent."""
+    logits = forward(params, cfg, batch["tokens"])
+    return cm.softmax_xent(logits, batch["labels"])
+
+
+# ---------------------------------------------------------------- serving
+def cache_spec(cfg, B: int, S: int, *, window: int = 0):
+    """ShapeDtypeStructs for the KV cache (``S`` = max context; a sliding
+    window stores min(S, window) slots)."""
+    slots = min(S, window) if window else S
+    dt = cm.cdtype(cfg)
+    kv = jax.ShapeDtypeStruct((cfg.n_layers, B, slots, cfg.n_kv_heads, cfg.head_dim_), dt)
+    return {"k": kv, "v": kv, "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def init_cache(cfg, B: int, S: int, *, window: int = 0):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), cache_spec(cfg, B, S, window=window))
+
+
+def prefill(params, cfg, tokens, cache_len: int, *, window: int = 0):
+    """Run the prompt, return (last-token logits, filled cache).
+
+    For a sliding-window cache only the last ``window`` positions are kept.
+    """
+    B, S = tokens.shape
+    x = cm.embed_tokens(params["embed"], tokens, cm.cdtype(cfg))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    mk = "window" if window else "causal"
+    slots = min(cache_len, window) if window else cache_len
+
+    def block_with_cache(x, lp):
+        h = cm.rms_norm(x, lp["ln1"])
+        y, k, v = cm.self_attention_with_kv(lp["attn"], cfg, h, pos,
+                                            mask_kind=mk, window=window)
+        x = x + y
+        x = x + cm.swiglu(lp["mlp"], cm.rms_norm(x, lp["ln2"]))
+        # keep the last `slots` positions, padded at the front if S < slots
+        kk = cm.pack_cache(k, slots, window)
+        vv = cm.pack_cache(v, slots, window)
+        return x, (kk, vv)
+
+    def step(carry, lp):
+        x2, kv = jax.remat(block_with_cache)(carry, lp)
+        return x2, kv
+
+    x, (ks, vs) = jax.lax.scan(step, x, params["layers"])
+    x = cm.rms_norm(x[:, -1:], params["ln_f"])
+    logits = cm.unembed(x, params["unembed"])[:, 0]
+    cache = {"k": ks, "v": vs, "pos": jnp.asarray(S, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(params, cfg, cache, token, *, window: int = 0):
+    """One decode step.  token: (B,) int32; cache from cache_spec/prefill.
+    Returns (logits (B, V), new cache).  ``cache["pos"]`` is the absolute
+    position of the token being written."""
+    B = token.shape[0]
+    pos = cache["pos"]
+    x = cm.embed_tokens(params["embed"], token[:, None], cm.cdtype(cfg))
+
+    def block(x, lp_kv):
+        lp, (kc, vc) = lp_kv
+        h = cm.rms_norm(x, lp["ln1"])
+        y, kc, vc = cm.attention_decode(lp["attn"], cfg, h, kc, vc, pos,
+                                        window=window)
+        x = x + y
+        x = x + cm.swiglu(lp["mlp"], cm.rms_norm(x, lp["ln2"]))
+        return x, (kc, vc)
+
+    def step(carry, lp_kv):
+        return jax.remat(block)(carry, lp_kv)
+
+    x, (ks, vs) = jax.lax.scan(step, x, (params["layers"], (cache["k"], cache["v"])))
+    x = cm.rms_norm(x, params["ln_f"])
+    logits = cm.unembed(x, params["unembed"])[:, 0]
+    return logits, {"k": ks, "v": vs, "pos": pos + 1}

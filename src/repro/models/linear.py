@@ -1,0 +1,33 @@
+"""The paper's own workload (Section V): l2-regularized logistic regression.
+batch: {"x": (B, l) features, "y": (B,) in {0,1}}."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common as cm
+
+
+def init(key, cfg):
+    dt = cm.pdtype(cfg)
+    return {"beta": jnp.zeros((cfg.d_model,), dt)}
+
+
+def logits(params, cfg, x):
+    return jnp.einsum("bl,l->b", x.astype(jnp.float32),
+                      params["beta"].astype(jnp.float32))
+
+
+def loss(params, cfg, batch, l2: float = 0.0):
+    z = logits(params, cfg, batch["x"])
+    y = batch["y"].astype(jnp.float32)
+    # sum (not mean): the paper's gradient is a sum over samples, which is
+    # what the coded aggregation reconstructs exactly.
+    nll = jnp.sum(jax.nn.softplus(z) - y * z)
+    if l2:
+        nll = nll + 0.5 * l2 * jnp.sum(params["beta"].astype(jnp.float32) ** 2)
+    return nll
+
+
+def predict_proba(params, cfg, x):
+    return jax.nn.sigmoid(logits(params, cfg, x))

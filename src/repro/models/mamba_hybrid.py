@@ -1,0 +1,307 @@
+"""Zamba2-style hybrid: a Mamba2 (SSD) backbone with one *shared* attention
+block (its own weights, reused) applied every ``cfg.attn_every`` SSM layers
+[arXiv:2411.15242].
+
+Mamba2 layer: in_proj -> [z | x | B | C | dt], causal depthwise conv (k=4)
+over [x|B|C], SSD state-space mixing (chunked scan: quadratic intra-chunk,
+recurrent across chunks), gated by silu(z), out_proj.  State per layer for
+decoding: SSM state (B, H, hd, N) + conv ring (B, 3, conv_width).
+
+Weight sharing of the attention block means its gradient accumulates
+contributions from every application site — handled naturally by autodiff and
+a good stress test for the coded aggregation layer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import common as cm
+
+CONV_K = 4
+
+
+def _dims(cfg):
+    D = cfg.d_model
+    Di = cfg.ssm_expand * D
+    hd = cfg.ssm_head_dim
+    H = Di // hd
+    N = cfg.ssm_state
+    return D, Di, H, hd, N
+
+
+# ------------------------------------------------------------------- init
+def _mamba_layer_init(k, cfg, dt):
+    D, Di, H, hd, N = _dims(cfg)
+    k1, k2, k3 = jax.random.split(k, 3)
+    conv_ch = Di + 2 * N
+    return {
+        "ln": jnp.ones((D,), dt),
+        "in_proj": cm.dense_init(k1, (D, 2 * Di + 2 * N + H), D, dt),
+        "conv_w": cm.dense_init(k2, (CONV_K, conv_ch), CONV_K, dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "A_log": jnp.zeros((H,), jnp.float32),          # A = -exp(A_log)
+        "D": jnp.ones((H,), jnp.float32),               # skip connection
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),   # softplus(-2) ~ 0.12
+        "out_proj": cm.dense_init(k3, (Di, D), Di, dt),
+        "norm": jnp.ones((Di,), dt),
+    }
+
+
+def _shared_attn_init(k, cfg, dt):
+    ka, km = jax.random.split(k)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dt),
+        "attn": cm.attn_params(ka, cfg, dt),
+        "ln2": jnp.ones((cfg.d_model,), dt),
+        "mlp": cm.mlp_params(km, cfg, dt),
+    }
+
+
+def init(key, cfg):
+    dt = cm.pdtype(cfg)
+    kl, ks, ke, ko = jax.random.split(key, 4)
+    return {
+        "embed": cm.dense_init(ke, (cfg.vocab, cfg.d_model), cfg.d_model, dt),
+        "mamba": cm.stacked_init(lambda k: _mamba_layer_init(k, cfg, dt),
+                                 kl, cfg.n_layers),
+        "shared_attn": _shared_attn_init(ks, cfg, dt),
+        "ln_f": jnp.ones((cfg.d_model,), dt),
+        "unembed": cm.dense_init(ko, (cfg.d_model, cfg.vocab), cfg.d_model, dt),
+    }
+
+
+# ----------------------------------------------------------- mamba2 (SSD)
+def _causal_conv(x, w, b):
+    """x: (B, T, C) depthwise causal conv, kernel (K, C)."""
+    B, T, C = x.shape
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(K):
+        out = out + xp[:, i:i + T] * w[i].astype(x.dtype)
+    return out + b.astype(x.dtype)
+
+
+def _split_proj(lp, cfg, h):
+    """h: (B, T, D) -> z, xin (B,T,Di), Bmat, Cmat (B,T,N), dt (B,T,H)."""
+    D, Di, H, hd, N = _dims(cfg)
+    proj = jnp.einsum("btd,de->bte", h, lp["in_proj"].astype(h.dtype))
+    z = proj[..., :Di]
+    xBC = proj[..., Di:Di + Di + 2 * N]
+    dt_raw = proj[..., Di + Di + 2 * N:]
+    xBC = _causal_conv(xBC, lp["conv_w"], lp["conv_b"])
+    xBC = jax.nn.silu(xBC)
+    xin = xBC[..., :Di]
+    Bmat = xBC[..., Di:Di + N]
+    Cmat = xBC[..., Di + N:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + lp["dt_bias"].astype(jnp.float32))
+    return z, xin, Bmat, Cmat, dt
+
+
+def ssd_chunked(lp, cfg, xin, Bmat, Cmat, dt):
+    """Chunked SSD.  xin: (B,T,Di) -> y (B,T,Di), final state (B,H,hd,N)."""
+    D, Di, H, hd, N = _dims(cfg)
+    Bsz, T, _ = xin.shape
+    cl = max(1, min(cfg.ssm_chunk, T))
+    while T % cl:
+        cl -= 1
+    nc = T // cl
+    x = xin.reshape(Bsz, nc, cl, H, hd)
+    Bm = Bmat.reshape(Bsz, nc, cl, N).astype(jnp.float32)
+    Cm = Cmat.reshape(Bsz, nc, cl, N).astype(jnp.float32)
+    dt = dt.reshape(Bsz, nc, cl, H)
+    A = -jnp.exp(lp["A_log"])                                    # (H,)
+    dA = dt * A                                                  # (B,nc,cl,H) log-decay
+    cum = jnp.cumsum(dA, axis=2)                                 # within-chunk cumsum
+
+    def chunk(state, args):
+        xc, Bc, Cc, dtc, cumc, dAc = args                        # leading (Bsz,)
+        # intra-chunk (quadratic): L[t,s] = exp(cum_t - cum_s) for s <= t
+        decay = cumc[:, :, None, :] - cumc[:, None, :, :]        # (B,t,s,H)
+        causal = jnp.tril(jnp.ones((xc.shape[1], xc.shape[1]), bool))
+        L = jnp.where(causal[None, :, :, None], jnp.exp(decay), 0.0)
+        CB = jnp.einsum("btn,bsn->bts", Cc, Bc)                  # (B,t,s)
+        W = CB[..., None] * L * dtc[:, None, :, :]               # (B,t,s,H)
+        y_intra = jnp.einsum("btsh,bshk->bthk", W, x32 := xc.astype(jnp.float32))
+        # contribution of the carried-in state
+        state_decay = jnp.exp(cumc)                              # (B,cl,H)
+        y_inter = jnp.einsum("btn,bhkn->bthk", Cc, state) * state_decay[..., None]
+        # update state: decay to end of chunk + new outer products
+        end = cumc[:, -1][:, None]                               # (B,1,H)
+        w_end = jnp.exp(end - cumc) * dtc                        # (B,cl,H)
+        new_outer = jnp.einsum("bshk,bsn,bsh->bhkn", x32, Bc, w_end)
+        state = state * jnp.exp(cumc[:, -1])[:, :, None, None] + new_outer
+        return state, y_intra + y_inter
+
+    state0 = jnp.zeros((Bsz, H, hd, N), jnp.float32)
+    args = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(Bm, 1, 0), jnp.moveaxis(Cm, 1, 0),
+            jnp.moveaxis(dt, 1, 0), jnp.moveaxis(cum, 1, 0), jnp.moveaxis(dA, 1, 0))
+    state, ys = jax.lax.scan(lambda s, a: jax.remat(chunk)(s, a), state0, args)
+    ys = jnp.moveaxis(ys, 0, 1).reshape(Bsz, T, H, hd)           # (B,T,H,hd)
+    ys = ys + x.reshape(Bsz, T, H, hd).astype(jnp.float32) * lp["D"][None, None, :, None]
+    return ys.reshape(Bsz, T, Di).astype(xin.dtype), state
+
+
+def mamba_block(lp, cfg, x):
+    h = cm.rms_norm(x, lp["ln"])
+    z, xin, Bmat, Cmat, dt = _split_proj(lp, cfg, h)
+    y, _ = ssd_chunked(lp, cfg, xin, Bmat, Cmat, dt)
+    y = cm.rms_norm(y * jax.nn.silu(z), lp["norm"])
+    return x + jnp.einsum("bte,ed->btd", y, lp["out_proj"].astype(x.dtype))
+
+
+def mamba_decode(lp, cfg, x, state, conv_buf):
+    """x: (B, 1, D); state: (B,H,hd,N); conv_buf: (B, K-1, conv_ch)."""
+    D, Di, H, hd, N = _dims(cfg)
+    h = cm.rms_norm(x, lp["ln"])
+    proj = jnp.einsum("btd,de->bte", h, lp["in_proj"].astype(h.dtype))
+    z = proj[..., :Di]
+    xBC_new = proj[:, 0, Di:Di + Di + 2 * N]                     # (B, conv_ch)
+    dt_raw = proj[..., Di + Di + 2 * N:]
+    # conv over ring buffer [buf, new]
+    seq = jnp.concatenate([conv_buf, xBC_new[:, None]], axis=1)  # (B, K, ch)
+    w = lp["conv_w"].astype(seq.dtype)
+    xBC = jnp.einsum("bkc,kc->bc", seq, w) + lp["conv_b"].astype(seq.dtype)
+    xBC = jax.nn.silu(xBC)
+    conv_buf = seq[:, 1:]
+    xin = xBC[:, :Di].reshape(-1, H, hd).astype(jnp.float32)
+    Bm = xBC[:, Di:Di + N].astype(jnp.float32)
+    Cm = xBC[:, Di + N:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                         + lp["dt_bias"].astype(jnp.float32))    # (B,H)
+    A = -jnp.exp(lp["A_log"])
+    dA = jnp.exp(dt * A)                                         # (B,H)
+    state = state * dA[..., None, None] + jnp.einsum(
+        "bhk,bn,bh->bhkn", xin, Bm, dt)
+    y = jnp.einsum("bhkn,bn->bhk", state, Cm)
+    y = y + xin * lp["D"][None, :, None]
+    y = y.reshape(-1, 1, Di).astype(x.dtype)
+    y = cm.rms_norm(y * jax.nn.silu(z), lp["norm"])
+    out = x + jnp.einsum("bte,ed->btd", y, lp["out_proj"].astype(x.dtype))
+    return out, state, conv_buf
+
+
+# ------------------------------------------------------- hybrid structure
+def _attn_block(sp, cfg, x, pos, mask_kind, window):
+    x = x + cm.self_attention(sp["attn"], cfg, cm.rms_norm(x, sp["ln1"]), pos,
+                              mask_kind=mask_kind, window=window)
+    x = x + cm.swiglu(sp["mlp"], cm.rms_norm(x, sp["ln2"]))
+    return x
+
+
+def _group_slices(cfg):
+    """Split n_layers into groups of attn_every (last group may be short)."""
+    k = cfg.attn_every
+    out, i = [], 0
+    while i < cfg.n_layers:
+        out.append((i, min(i + k, cfg.n_layers)))
+        i += k
+    return out
+
+
+def forward(params, cfg, tokens):
+    B, S = tokens.shape
+    x = cm.embed_tokens(params["embed"], tokens, cm.cdtype(cfg))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    for (a, b) in _group_slices(cfg):
+        stack = jax.tree.map(lambda p: p[a:b], params["mamba"])
+        x = cm.scan_layers(lambda h, lp: mamba_block(lp, cfg, h), x, stack)
+        x = jax.remat(lambda sp, h: _attn_block(sp, cfg, h, pos, "causal", 0))(
+            params["shared_attn"], x)
+    x = cm.rms_norm(x, params["ln_f"])
+    return cm.unembed(x, params["unembed"])
+
+
+def loss(params, cfg, batch):
+    logits = forward(params, cfg, batch["tokens"])
+    return cm.softmax_xent(logits, batch["labels"])
+
+
+# ---------------------------------------------------------------- serving
+def state_spec(cfg, B: int, S: int, *, window: int = 0):
+    """SSM state per layer + conv ring + shared-attn KV cache (dense or
+    sliding window over min(S, window))."""
+    D, Di, H, hd, N = _dims(cfg)
+    n_apps = len(_group_slices(cfg))
+    slots = min(S, window) if window else S
+    dt = cm.cdtype(cfg)
+    conv_ch = Di + 2 * N
+    return {
+        "ssm": jax.ShapeDtypeStruct((cfg.n_layers, B, H, hd, N), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((cfg.n_layers, B, CONV_K - 1, conv_ch), dt),
+        "k": jax.ShapeDtypeStruct((n_apps, B, slots, cfg.n_kv_heads, cfg.head_dim_), dt),
+        "v": jax.ShapeDtypeStruct((n_apps, B, slots, cfg.n_kv_heads, cfg.head_dim_), dt),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def init_state(cfg, B: int, S: int, *, window: int = 0):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        state_spec(cfg, B, S, window=window))
+
+
+def decode_step(params, cfg, state, token, *, window: int = 0):
+    pos = state["pos"]
+    x = cm.embed_tokens(params["embed"], token[:, None], cm.cdtype(cfg))
+    ssm, conv = state["ssm"], state["conv"]
+    ks, vs = state["k"], state["v"]
+    new_ssm, new_conv, new_k, new_v = [], [], [], []
+    for g, (a, b) in enumerate(_group_slices(cfg)):
+        for li in range(a, b):
+            lp = jax.tree.map(lambda p: p[li], params["mamba"])
+            x, s_new, c_new = mamba_decode(lp, cfg, x, ssm[li], conv[li])
+            new_ssm.append(s_new)
+            new_conv.append(c_new)
+        sp = params["shared_attn"]
+        h = cm.rms_norm(x, sp["ln1"])
+        y, kc, vc = cm.attention_decode(sp["attn"], cfg, h, ks[g], vs[g], pos,
+                                        window=window)
+        x = x + y
+        x = x + cm.swiglu(sp["mlp"], cm.rms_norm(x, sp["ln2"]))
+        new_k.append(kc)
+        new_v.append(vc)
+    x = cm.rms_norm(x, params["ln_f"])
+    logits = cm.unembed(x, params["unembed"])[:, 0]
+    return logits, {"ssm": jnp.stack(new_ssm), "conv": jnp.stack(new_conv),
+                    "k": jnp.stack(new_k), "v": jnp.stack(new_v), "pos": pos + 1}
+
+
+def prefill(params, cfg, tokens, cache_len: int, *, window: int = 0):
+    """Chunked-SSD prefill producing logits for the last token + decode state."""
+    B, S = tokens.shape
+    x = cm.embed_tokens(params["embed"], tokens, cm.cdtype(cfg))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    mk = "window" if window else "causal"
+    slots = min(cache_len, window) if window else cache_len
+    D, Di, H, hd, N = _dims(cfg)
+    conv_ch = Di + 2 * N
+    new_ssm, new_conv, new_k, new_v = [], [], [], []
+    for g, (a, b) in enumerate(_group_slices(cfg)):
+        for li in range(a, b):
+            lp = jax.tree.map(lambda p: p[li], params["mamba"])
+            h = cm.rms_norm(x, lp["ln"])
+            z, xin, Bmat, Cmat, dt = _split_proj(lp, cfg, h)
+            y, s_fin = ssd_chunked(lp, cfg, xin, Bmat, Cmat, dt)
+            y = cm.rms_norm(y * jax.nn.silu(z), lp["norm"])
+            x = x + jnp.einsum("bte,ed->btd", y, lp["out_proj"].astype(x.dtype))
+            new_ssm.append(s_fin)
+            # conv ring = last K-1 pre-conv inputs
+            proj = jnp.einsum("btd,de->bte", h, lp["in_proj"].astype(h.dtype))
+            xBC_pre = proj[..., Di:Di + conv_ch]
+            new_conv.append(xBC_pre[:, -(CONV_K - 1):])
+        sp = params["shared_attn"]
+        h = cm.rms_norm(x, sp["ln1"])
+        y, k, v = cm.self_attention_with_kv(sp["attn"], cfg, h, pos,
+                                            mask_kind=mk, window=window)
+        x = x + y
+        x = x + cm.swiglu(sp["mlp"], cm.rms_norm(x, sp["ln2"]))
+        new_k.append(cm.pack_cache(k, slots, window))
+        new_v.append(cm.pack_cache(v, slots, window))
+    x = cm.rms_norm(x[:, -1:], params["ln_f"])
+    logits = cm.unembed(x, params["unembed"])[:, 0]
+    return logits, {"ssm": jnp.stack(new_ssm), "conv": jnp.stack(new_conv),
+                    "k": jnp.stack(new_k), "v": jnp.stack(new_v),
+                    "pos": jnp.asarray(S, jnp.int32)}

@@ -1,0 +1,72 @@
+"""InternVL2-style VLM: the language backbone (InternLM2 = llama-family GQA
+decoder) consuming stub vision embeddings [arXiv:2404.16821].
+
+The ViT + MLP projector is a STUB per the assignment: ``batch["embeds"]`` /
+``input_specs()`` provide precomputed patch embeddings (B, P, d_model) that
+are prepended to the token embeddings.  Loss is computed on text positions
+only.  Serving: the prompt (patches + text) is prefilled into a standard KV
+cache; decode is identical to the dense LM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common as cm
+from . import dense
+
+init = dense.init          # same parameter structure as the dense backbone
+cache_spec = dense.cache_spec
+init_cache = dense.init_cache
+decode_step = dense.decode_step
+
+
+def forward(params, cfg, tokens, embeds, *, window: int = 0):
+    """tokens: (B, S_txt); embeds: (B, P, D) -> logits (B, P+S_txt, V)."""
+    B, S_txt = tokens.shape
+    P = embeds.shape[1]
+    xt = cm.embed_tokens(params["embed"], tokens, cm.cdtype(cfg))
+    x = jnp.concatenate([embeds.astype(xt.dtype), xt], axis=1)
+    S = P + S_txt
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    mk = "window" if window else "causal"
+    x = cm.scan_layers(lambda h, lp: dense._block(h, lp, cfg, pos, mk, window),
+                       x, params["layers"])
+    x = cm.rms_norm(x, params["ln_f"])
+    return cm.unembed(x, params["unembed"])
+
+
+def loss(params, cfg, batch):
+    """batch: {"embeds": (B,P,D), "tokens": (B,S), "labels": (B,S)} —
+    loss on text positions only."""
+    logits = forward(params, cfg, batch["tokens"], batch["embeds"])
+    P = batch["embeds"].shape[1]
+    return cm.softmax_xent(logits[:, P:], batch["labels"])
+
+
+def prefill(params, cfg, tokens, cache_len: int, *, embeds=None, window: int = 0):
+    """Prefill patches + text into the KV cache.  ``embeds`` required."""
+    B, S_txt = tokens.shape
+    P = embeds.shape[1]
+    xt = cm.embed_tokens(params["embed"], tokens, cm.cdtype(cfg))
+    x = jnp.concatenate([embeds.astype(xt.dtype), xt], axis=1)
+    S = P + S_txt
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    mk = "window" if window else "causal"
+    slots = min(cache_len, window) if window else cache_len
+
+    def block_with_cache(x, lp):
+        h = cm.rms_norm(x, lp["ln1"])
+        y, k, v = cm.self_attention_with_kv(lp["attn"], cfg, h, pos,
+                                            mask_kind=mk, window=window)
+        x = x + y
+        x = x + cm.swiglu(lp["mlp"], cm.rms_norm(x, lp["ln2"]))
+        kk = cm.pack_cache(k, slots, window)
+        vv = cm.pack_cache(v, slots, window)
+        return x, (kk, vv)
+
+    x, (ks, vs) = jax.lax.scan(lambda c, lp: jax.remat(block_with_cache)(c, lp),
+                               x, params["layers"])
+    x = cm.rms_norm(x[:, -1:], params["ln_f"])
+    logits = cm.unembed(x, params["unembed"])[:, 0]
+    return logits, {"k": ks, "v": vs, "pos": jnp.asarray(S, jnp.int32)}

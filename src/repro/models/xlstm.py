@@ -1,0 +1,346 @@
+"""xLSTM LM (arXiv:2405.04517): alternating mLSTM / sLSTM blocks.
+
+- mLSTM (matrix memory, exponential gating) is trained in its *parallel*
+  (attention-like) form with a stabilized log-gate decay matrix; decoding uses
+  the O(1)-per-step recurrent form with state (C, n, m) per head.
+- sLSTM (scalar memory, recurrent gate connections) is inherently sequential:
+  trained with a chunked remat'd ``lax.scan`` over time (chunk boundaries are
+  the only stored states), decoded step-by-step.
+
+``d_ff = 0`` in the assignment: there is no separate MLP block; the up/down
+projections live inside the cells (projection factor 2), as in the paper.
+Layers are stacked in (mLSTM, sLSTM) pairs and scanned.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import common as cm
+
+PF = 2  # block-internal projection factor
+
+
+def _dims(cfg):
+    D = cfg.d_model
+    Di = PF * D                    # inner width
+    H = cfg.n_heads
+    hd = Di // H
+    return D, Di, H, hd
+
+
+# ------------------------------------------------------------------- init
+def init(key, cfg):
+    assert cfg.n_layers % 2 == 0, "xLSTM stacks (mLSTM, sLSTM) pairs"
+    D, Di, H, hd = _dims(cfg)
+    dt = cm.pdtype(cfg)
+    kl, ke, ko = jax.random.split(key, 3)
+
+    def pair_init(k):
+        km, ks = jax.random.split(k)
+        kqm, kkm, kvm, kim, kfm, kom, kum, kdm = jax.random.split(km, 8)
+        mlstm = {
+            "ln": jnp.ones((D,), dt),
+            "w_up": cm.dense_init(kum, (D, 2 * Di), D, dt),   # [cell in | out gate]
+            "wq": cm.dense_init(kqm, (Di, Di), Di, dt),
+            "wk": cm.dense_init(kkm, (Di, Di), Di, dt),
+            "wv": cm.dense_init(kvm, (Di, Di), Di, dt),
+            "wi": cm.dense_init(kim, (Di, H), Di, dt),
+            "wf": cm.dense_init(kfm, (Di, H), Di, dt),
+            "bi": jnp.zeros((H,), dt),
+            "bf": jnp.full((H,), 3.0, dt),                    # forget-open init
+            "w_down": cm.dense_init(kdm, (Di, D), Di, dt),
+        }
+        kzs, kis, kfs, kos, krs, kus, kds = jax.random.split(ks, 7)
+        slstm = {
+            "ln": jnp.ones((D,), dt),
+            "w_up": cm.dense_init(kus, (D, Di), D, dt),
+            "wz": cm.dense_init(kzs, (Di, Di), Di, dt),
+            "wi": cm.dense_init(kis, (Di, Di), Di, dt),
+            "wf": cm.dense_init(kfs, (Di, Di), Di, dt),
+            "wo": cm.dense_init(kos, (Di, Di), Di, dt),
+            # block-diagonal recurrent weights: (H, hd, hd) per gate
+            "r": cm.dense_init(krs, (4, H, hd, hd), hd, dt),
+            "bz": jnp.zeros((Di,), dt), "bi": jnp.zeros((Di,), dt),
+            "bf": jnp.full((Di,), 3.0, dt), "bo": jnp.zeros((Di,), dt),
+            "w_down": cm.dense_init(kds, (Di, D), Di, dt),
+        }
+        return {"mlstm": mlstm, "slstm": slstm}
+
+    return {
+        "embed": cm.dense_init(ke, (cfg.vocab, D), D, dt),
+        "pairs": cm.stacked_init(pair_init, kl, cfg.n_layers // 2),
+        "ln_f": jnp.ones((D,), dt),
+        "unembed": cm.dense_init(ko, (D, cfg.vocab), D, dt),
+    }
+
+
+# --------------------------------------------------------- mLSTM parallel
+def _mlstm_gates(lp, xi):
+    """xi: (B, T, Di) cell input -> q, k, v (B,T,H,hd), i, f (B,T,H) f32."""
+    B, T, Di = xi.shape
+    H = lp["wi"].shape[1]
+    hd = Di // H
+    q = jnp.einsum("btd,de->bte", xi, lp["wq"].astype(xi.dtype)).reshape(B, T, H, hd)
+    k = jnp.einsum("btd,de->bte", xi, lp["wk"].astype(xi.dtype)).reshape(B, T, H, hd)
+    v = jnp.einsum("btd,de->bte", xi, lp["wv"].astype(xi.dtype)).reshape(B, T, H, hd)
+    i = (jnp.einsum("btd,dh->bth", xi, lp["wi"].astype(xi.dtype))
+         + lp["bi"].astype(xi.dtype)).astype(jnp.float32)
+    f = (jnp.einsum("btd,dh->bth", xi, lp["wf"].astype(xi.dtype))
+         + lp["bf"].astype(xi.dtype)).astype(jnp.float32)
+    return q, k, v, i, f
+
+
+def mlstm_init_state(B, H, hd):
+    return {"C": jnp.zeros((B, H, hd, hd), jnp.float32),
+            "n": jnp.zeros((B, H, hd), jnp.float32),
+            "m": jnp.zeros((B, H), jnp.float32)}
+
+
+def mlstm_chunked(lp, cfg, xi, state):
+    """Chunkwise-parallel stabilized mLSTM: quadratic intra-chunk, the
+    recurrent (C, n, m) state carried across chunks (so training/prefill and
+    the one-step decode form agree exactly).  xi: (B, T, Di)."""
+    q, k, v, i, f = _mlstm_gates(lp, xi)
+    B, T, H, hd = q.shape
+    cl = max(1, min(cfg.ssm_chunk, T))
+    while T % cl:
+        cl -= 1
+    nc = T // cl
+    r = lambda x: jnp.moveaxis(x.reshape(B, nc, cl, *x.shape[2:]), 1, 0)
+    qs, ks, vs = r(q.astype(jnp.float32) / np.sqrt(hd)), r(k.astype(jnp.float32)), \
+        r(v.astype(jnp.float32))
+    is_, fs = r(i), r(f)
+
+    def chunk(st, args):
+        qc, kc, vc, ic, fc = args                    # (B, cl, ...)
+        C0, n0, m0 = st["C"], st["n"], st["m"]
+        lf = jax.nn.log_sigmoid(fc)                  # (B,cl,H)
+        F = jnp.cumsum(lf, axis=1)
+        a = ic - F
+        mt = F + jnp.maximum(m0[:, None], jax.lax.cummax(a, axis=1))
+        w0 = jnp.exp(F + m0[:, None] - mt)           # (B,cl,H) state weight
+        logw = F[:, :, None, :] + a[:, None, :, :] - mt[:, :, None, :]
+        causal = jnp.tril(jnp.ones((qc.shape[1], qc.shape[1]), bool))
+        w = jnp.where(causal[None, :, :, None], jnp.exp(logw), 0.0)
+        scores = jnp.einsum("bthk,bshk->btsh", qc, kc)
+        sw = scores * w
+        num = jnp.einsum("btsh,bshv->bthv", sw, vc) \
+            + w0[..., None] * jnp.einsum("bhvk,bthk->bthv", C0, qc)
+        den_dot = sw.sum(2) + w0 * jnp.einsum("bhk,bthk->bth", n0, qc)
+        den = jnp.maximum(jnp.abs(den_dot), jnp.exp(-mt))
+        h = num / den[..., None]                     # (B,cl,H,hd)
+        # end-of-chunk state
+        m_end = mt[:, -1]
+        wend = jnp.exp(F[:, -1][:, None] + a - m_end[:, None])   # (B,s,H)
+        w0e = jnp.exp(F[:, -1] + m0 - m_end)
+        C = w0e[..., None, None] * C0 + jnp.einsum("bsh,bshv,bshk->bhvk",
+                                                   wend, vc, kc)
+        n = w0e[..., None] * n0 + jnp.einsum("bsh,bshk->bhk", wend, kc)
+        return {"C": C, "n": n, "m": m_end}, h
+
+    state, hs = jax.lax.scan(lambda s, a: jax.remat(chunk)(s, a), state,
+                             (qs, ks, vs, is_, fs))
+    hs = jnp.moveaxis(hs, 0, 1).reshape(B, T, H * hd)
+    return hs.astype(xi.dtype), state
+
+
+def mlstm_block(lp, cfg, x, state=None):
+    """x: (B, T, D) -> (x', final state)."""
+    _, Di, H, hd = _dims(cfg)
+    if state is None:
+        state = mlstm_init_state(x.shape[0], H, hd)
+    h = cm.rms_norm(x, lp["ln"])
+    up = jnp.einsum("btd,de->bte", h, lp["w_up"].astype(h.dtype))
+    xi, g = jnp.split(up, 2, axis=-1)
+    y, state = mlstm_chunked(lp, cfg, xi, state)
+    y = y * jax.nn.silu(g)
+    return x + jnp.einsum("bte,ed->btd", y, lp["w_down"].astype(h.dtype)), state
+
+
+def mlstm_decode(lp, cfg, x, state):
+    """One-step recurrent form.  x: (B, 1, D); state: dict(C, n, m)."""
+    h = cm.rms_norm(x, lp["ln"])
+    up = jnp.einsum("btd,de->bte", h, lp["w_up"].astype(h.dtype))
+    xi, g = jnp.split(up, 2, axis=-1)
+    q, k, v, i, f = _mlstm_gates(lp, xi)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]                          # (B,H,hd)
+    i, f = i[:, 0], f[:, 0]                                      # (B,H)
+    lf = jax.nn.log_sigmoid(f)
+    m_new = jnp.maximum(lf + state["m"], i)
+    fp = jnp.exp(lf + state["m"] - m_new)[..., None]
+    ip = jnp.exp(i - m_new)[..., None]
+    n = fp * state["n"] + ip * k.astype(jnp.float32)             # (B,H,hd)
+    C = fp[..., None] * state["C"] + ip[..., None] * jnp.einsum(
+        "bhv,bhk->bhvk", v.astype(jnp.float32), k.astype(jnp.float32))
+    num = jnp.einsum("bhvk,bhk->bhv", C, q.astype(jnp.float32) / np.sqrt(q.shape[-1]))
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q.astype(jnp.float32)
+                                         / np.sqrt(q.shape[-1]))), jnp.exp(-m_new))
+    y = (num / den[..., None]).astype(x.dtype)
+    B, H, hd = y.shape
+    y = y.reshape(B, 1, H * hd) * jax.nn.silu(g)
+    out = x + jnp.einsum("bte,ed->btd", y, lp["w_down"].astype(x.dtype))
+    return out, {"C": C, "n": n, "m": m_new}
+
+
+# ------------------------------------------------------------ sLSTM scan
+def _slstm_cell(lp, H, hd, xz, xi, xf, xo, state):
+    """One time step.  x*: (B, Di) pre-activations from the input;
+    state: dict(c, n, h, m) each (B, Di) [h used in recurrent gates]."""
+    B = xz.shape[0]
+    hr = state["h"].reshape(B, H, hd)
+    r = lp["r"].astype(jnp.float32)
+    rz = jnp.einsum("bhk,hkl->bhl", hr, r[0]).reshape(B, -1)
+    ri = jnp.einsum("bhk,hkl->bhl", hr, r[1]).reshape(B, -1)
+    rf = jnp.einsum("bhk,hkl->bhl", hr, r[2]).reshape(B, -1)
+    ro = jnp.einsum("bhk,hkl->bhl", hr, r[3]).reshape(B, -1)
+    z = jnp.tanh(xz + rz)
+    o = jax.nn.sigmoid(xo + ro)
+    it = xi + ri
+    ft = jax.nn.log_sigmoid(xf + rf)
+    m_new = jnp.maximum(ft + state["m"], it)
+    ip = jnp.exp(it - m_new)
+    fp = jnp.exp(ft + state["m"] - m_new)
+    c = fp * state["c"] + ip * z
+    n = fp * state["n"] + ip
+    h = o * c / jnp.maximum(n, 1.0)
+    return {"c": c, "n": n, "h": h, "m": m_new}
+
+
+def slstm_seq(lp, cfg, xi_seq, state):
+    """Chunked remat'd scan over time.  xi_seq: (B, T, Di) inner input."""
+    B, T, Di = xi_seq.shape
+    _, _, H, hd = _dims(cfg)
+    xz = (jnp.einsum("btd,de->bte", xi_seq, lp["wz"].astype(xi_seq.dtype))
+          + lp["bz"].astype(xi_seq.dtype)).astype(jnp.float32)
+    xg_i = (jnp.einsum("btd,de->bte", xi_seq, lp["wi"].astype(xi_seq.dtype))
+            + lp["bi"].astype(xi_seq.dtype)).astype(jnp.float32)
+    xg_f = (jnp.einsum("btd,de->bte", xi_seq, lp["wf"].astype(xi_seq.dtype))
+            + lp["bf"].astype(xi_seq.dtype)).astype(jnp.float32)
+    xg_o = (jnp.einsum("btd,de->bte", xi_seq, lp["wo"].astype(xi_seq.dtype))
+            + lp["bo"].astype(xi_seq.dtype)).astype(jnp.float32)
+
+    chunk = max(1, min(cfg.ssm_chunk, T))
+    while T % chunk:
+        chunk -= 1
+    nc = T // chunk
+
+    def chunk_body(state, xs):
+        cz, ci, cf, co = xs  # (chunk, B, Di)
+
+        def step(st, x4):
+            st = _slstm_cell(lp, H, hd, *x4, st)
+            return st, st["h"]
+
+        state, hs = jax.lax.scan(step, state, (cz, ci, cf, co))
+        return state, hs
+
+    xs = tuple(jnp.moveaxis(x, 1, 0).reshape(nc, chunk, B, Di)
+               for x in (xz, xg_i, xg_f, xg_o))
+    state, hs = jax.lax.scan(lambda s, x: jax.remat(chunk_body)(s, x), state, xs)
+    hs = hs.reshape(T, B, Di)
+    return jnp.moveaxis(hs, 0, 1).astype(xi_seq.dtype), state
+
+
+def slstm_init_state(cfg, B):
+    _, Di, H, hd = _dims(cfg)
+    z = jnp.zeros((B, Di), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": z}
+
+
+def slstm_block(lp, cfg, x, state=None):
+    if state is None:
+        state = slstm_init_state(cfg, x.shape[0])
+    h = cm.rms_norm(x, lp["ln"])
+    xi = jnp.einsum("btd,de->bte", h, lp["w_up"].astype(h.dtype))
+    y, state = slstm_seq(lp, cfg, xi, state)
+    return x + jnp.einsum("bte,ed->btd", y, lp["w_down"].astype(h.dtype)), state
+
+
+def slstm_decode(lp, cfg, x, state):
+    h = cm.rms_norm(x, lp["ln"])
+    xi = jnp.einsum("btd,de->bte", h, lp["w_up"].astype(h.dtype))[:, 0]
+    _, _, H, hd = _dims(cfg)
+    xz = (xi @ lp["wz"].astype(xi.dtype) + lp["bz"].astype(xi.dtype)).astype(jnp.float32)
+    xii = (xi @ lp["wi"].astype(xi.dtype) + lp["bi"].astype(xi.dtype)).astype(jnp.float32)
+    xf = (xi @ lp["wf"].astype(xi.dtype) + lp["bf"].astype(xi.dtype)).astype(jnp.float32)
+    xo = (xi @ lp["wo"].astype(xi.dtype) + lp["bo"].astype(xi.dtype)).astype(jnp.float32)
+    state = _slstm_cell(lp, H, hd, xz, xii, xf, xo, state)
+    y = state["h"][:, None].astype(x.dtype)
+    out = x + jnp.einsum("bte,ed->btd", y, lp["w_down"].astype(x.dtype))
+    return out, state
+
+
+# ---------------------------------------------------------------- forward
+def _pair(x, lp, cfg):
+    x, mst = mlstm_block(lp["mlstm"], cfg, x)
+    x, sst = slstm_block(lp["slstm"], cfg, x)
+    return x, (mst, sst)
+
+
+def forward(params, cfg, tokens):
+    x = cm.embed_tokens(params["embed"], tokens, cm.cdtype(cfg))
+    x = cm.scan_layers(lambda h, lp: _pair(h, lp, cfg)[0], x, params["pairs"])
+    x = cm.rms_norm(x, params["ln_f"])
+    return cm.unembed(x, params["unembed"])
+
+
+def loss(params, cfg, batch):
+    logits = forward(params, cfg, batch["tokens"])
+    return cm.softmax_xent(logits, batch["labels"])
+
+
+# ---------------------------------------------------------------- serving
+def state_spec(cfg, B: int):
+    """Recurrent decode state: mLSTM (C, n, m) + sLSTM (c, n, h, m) per pair."""
+    _, Di, H, hd = _dims(cfg)
+    P = cfg.n_layers // 2
+    f32 = jnp.float32
+    return {
+        "mlstm": {"C": jax.ShapeDtypeStruct((P, B, H, hd, hd), f32),
+                  "n": jax.ShapeDtypeStruct((P, B, H, hd), f32),
+                  "m": jax.ShapeDtypeStruct((P, B, H), f32)},
+        "slstm": {k: jax.ShapeDtypeStruct((P, B, Di), f32)
+                  for k in ("c", "n", "h", "m")},
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def init_state(cfg, B: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), state_spec(cfg, B))
+
+
+def decode_step(params, cfg, state, token):
+    x = cm.embed_tokens(params["embed"], token[:, None], cm.cdtype(cfg))
+
+    def pair(x, lp_st):
+        lp, (mst, sst) = lp_st
+        x, mst = mlstm_decode(lp["mlstm"], cfg, x, mst)
+        x, sst = slstm_decode(lp["slstm"], cfg, x, sst)
+        return x, (mst, sst)
+
+    x, (mst, sst) = jax.lax.scan(
+        lambda c, a: jax.remat(pair)(c, a), x,
+        (params["pairs"], (state["mlstm"], state["slstm"])))
+    x = cm.rms_norm(x, params["ln_f"])
+    logits = cm.unembed(x, params["unembed"])[:, 0]
+    return logits, {"mlstm": mst, "slstm": sst, "pos": state["pos"] + 1}
+
+
+def prefill(params, cfg, tokens, cache_len: int = 0, **_):
+    """Chunkwise-parallel prefill: runs the sequence forms (quadratic only
+    within ssm_chunk) and returns last-token logits + the recurrent state."""
+    B, T = tokens.shape
+    x = cm.embed_tokens(params["embed"], tokens, cm.cdtype(cfg))
+
+    def pair_with_state(x, lp):
+        x, (mst, sst) = _pair(x, lp, cfg)
+        return x, (mst, sst)
+
+    x, (mst, sst) = jax.lax.scan(
+        lambda c, lp: jax.remat(pair_with_state)(c, lp), x, params["pairs"])
+    x = cm.rms_norm(x[:, -1:], params["ln_f"])
+    logits = cm.unembed(x, params["unembed"])[:, 0]
+    return logits, {"mlstm": mst, "slstm": sst,
+                    "pos": jnp.asarray(T, jnp.int32)}

@@ -1,0 +1,3 @@
+from .optimizers import Optimizer, adamw, nag, sgd_momentum, get_optimizer
+
+__all__ = ["Optimizer", "adamw", "nag", "sgd_momentum", "get_optimizer"]

@@ -1,0 +1,106 @@
+"""Gradient-based optimizers as pure pytree transforms.
+
+NAG (Nesterov's Accelerated Gradient, Bubeck FnT 2015 §3.7) is the paper's
+optimizer for the Section-V experiments; SGD-momentum and AdamW cover the
+model-zoo training paths.  All states are pytrees of f32 mirrors so the
+update math is stable under bf16 params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], tuple[PyTree, PyTree]]
+    # update(grads, opt_state, params) -> (new_params, new_opt_state)
+
+
+def _f32(t):
+    # jnp.array(copy=True): astype(f32) of an f32 param would alias the
+    # param buffer, and jit(donate_argnums=(0, 1)) would then donate the
+    # same buffer twice.
+    return jax.tree.map(lambda x: jnp.array(x, jnp.float32, copy=True), t)
+
+
+def nag(lr: float) -> Optimizer:
+    """Nesterov's accelerated gradient with the paper's (Bubeck §3.7)
+    lambda-sequence: x_{k+1} = y_k - lr*g(y_k);
+    y_{k+1} = x_{k+1} + gamma_k (x_{k+1} - x_k).  Params carried = y."""
+
+    def init(params):
+        return {"x_prev": _f32(params),
+                "lam": jnp.zeros((), jnp.float32)}
+
+    def update(grads, state, params):
+        lam = state["lam"]
+        lam_next = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * lam * lam))
+        gamma = (lam - 1.0) / lam_next
+
+        def upd(y, g, x_prev):
+            x_new = y.astype(jnp.float32) - lr * g.astype(jnp.float32)
+            y_new = x_new + gamma * (x_new - x_prev)
+            return y_new.astype(y.dtype), x_new
+
+        flat_y, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_x = treedef.flatten_up_to(state["x_prev"])
+        outs = [upd(y, g, x) for y, g, x in zip(flat_y, flat_g, flat_x)]
+        new_params = treedef.unflatten([o[0] for o in outs])
+        new_x = treedef.unflatten([o[1] for o in outs])
+        return new_params, {"x_prev": new_x, "lam": lam_next}
+
+    return Optimizer(init, update)
+
+
+def sgd_momentum(lr: float, momentum: float = 0.9) -> Optimizer:
+    def init(params):
+        return {"mu": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+    def update(grads, state, params):
+        mu = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32),
+                          state["mu"], grads)
+        new = jax.tree.map(lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype),
+                           params, mu)
+        return new, {"mu": mu}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        t = state["t"] + 1
+        bc1 = 1.0 - b1 ** t.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** t.astype(jnp.float32)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+
+        def upd(p, m_, v_):
+            step = lr * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            p32 = p.astype(jnp.float32)
+            if weight_decay:
+                step = step + lr * weight_decay * p32
+            return (p32 - step).astype(p.dtype)
+
+        return jax.tree.map(upd, params, m, v), {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update)
+
+
+def get_optimizer(name: str, lr: float, **kw) -> Optimizer:
+    return {"nag": nag, "sgd": sgd_momentum, "adamw": adamw}[name](lr, **kw)

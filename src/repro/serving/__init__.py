@@ -1,0 +1,3 @@
+from .engine import build_serve_artifacts, ServeArtifacts
+
+__all__ = ["build_serve_artifacts", "ServeArtifacts"]

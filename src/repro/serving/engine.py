@@ -1,0 +1,130 @@
+"""Serving layer: sharded prefill / decode steps + a small batched-request
+engine for the examples.
+
+Serving is pure pjit/GSPMD (no shard_map): gradient coding is a training-
+time technique; the serving path exercises the same model zoo, meshes and
+sharding rules so every (arch x decode shape) lowers on the production mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import api as model_api
+from repro.train import sharding
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeArtifacts:
+    prefill: Callable | None
+    decode: Callable
+    param_shardings: PyTree
+    cache_shardings: PyTree
+    cache_shapes: PyTree
+    token_sharding: Any
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_serve_artifacts(cfg, mesh, *, batch: int, seq_len: int,
+                          window: int = 0) -> ServeArtifacts:
+    """Sharded decode (and prefill where sensible) for one arch x shape."""
+    data_axes = tuple(a for a in mesh.axis_names if a != "model")
+    dsize = int(np.prod([mesh.shape[a] for a in data_axes]))
+    msize = mesh.shape["model"]
+
+    pshapes = jax.eval_shape(lambda: model_api.init(jax.random.PRNGKey(0), cfg))
+    pspecs = sharding.param_specs(pshapes, msize)
+    cshapes = model_api.cache_spec(cfg, batch, seq_len, window=window)
+    cspecs = sharding.cache_specs(cshapes, data_axes, dsize, msize)
+    ax = data_axes if len(data_axes) > 1 else data_axes[0]
+    tok_spec = P(ax) if batch % dsize == 0 and batch >= dsize else P(None)
+
+    decode_fn = model_api.make_decode(cfg, window=window)
+    decode = jax.jit(decode_fn,
+                     in_shardings=(_ns(mesh, pspecs), _ns(mesh, cspecs),
+                                   NamedSharding(mesh, tok_spec)),
+                     out_shardings=(NamedSharding(mesh, tok_spec),
+                                    _ns(mesh, cspecs)),
+                     donate_argnums=(1,))
+
+    if True:
+        pre_fn = model_api.make_prefill(cfg, seq_len, window=window)
+        if cfg.family == "encdec":
+            bshapes = {"embeds": jax.ShapeDtypeStruct(
+                (batch, seq_len, cfg.d_model), jnp.dtype(cfg.compute_dtype))}
+        elif cfg.family == "vlm":
+            bshapes = {
+                "tokens": jax.ShapeDtypeStruct(
+                    (batch, max(seq_len - cfg.n_frontend_tokens, 16)), jnp.int32),
+                "embeds": jax.ShapeDtypeStruct(
+                    (batch, cfg.n_frontend_tokens, cfg.d_model),
+                    jnp.dtype(cfg.compute_dtype)),
+            }
+        else:
+            bshapes = {"tokens": jax.ShapeDtypeStruct((batch, seq_len), jnp.int32)}
+        bspecs = sharding.serve_batch_specs(bshapes, data_axes, dsize)
+        logit_spec = P(ax, None) if batch % dsize == 0 and batch >= dsize \
+            else P(None, None)
+        # out_shardings pin the cache to the decode layout so the prefill
+        # output feeds decode without a reshard-mismatch
+        prefill = jax.jit(pre_fn,
+                          in_shardings=(_ns(mesh, pspecs), _ns(mesh, bspecs)),
+                          out_shardings=(NamedSharding(mesh, logit_spec),
+                                         _ns(mesh, cspecs)))
+
+    return ServeArtifacts(prefill=prefill, decode=decode,
+                          param_shardings=_ns(mesh, pspecs),
+                          cache_shardings=_ns(mesh, cspecs),
+                          cache_shapes=cshapes,
+                          token_sharding=NamedSharding(mesh, tok_spec))
+
+
+# ------------------------------------------------------------ toy engine
+class BatchedEngine:
+    """Minimal batched-request serving loop for the examples: fixed batch
+    slots, greedy decoding, per-slot stop lengths."""
+
+    def __init__(self, cfg, mesh, params, *, batch: int, seq_len: int,
+                 window: int = 0):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.arts = build_serve_artifacts(cfg, mesh, batch=batch,
+                                          seq_len=seq_len, window=window)
+        # reshard to the serving layout (params may arrive replicated or in
+        # the training layout)
+        self.params = jax.device_put(params, self.arts.param_shardings)
+        self.batch = batch
+        self.seq_len = seq_len
+        self.window = window
+
+    def generate(self, prompts: np.ndarray, max_new: int) -> np.ndarray:
+        """prompts: (batch, prompt_len) int32 -> (batch, max_new)."""
+        with jax.sharding.set_mesh(self.mesh):
+            batch = {"tokens": jnp.asarray(prompts)}
+            if self.cfg.family in ("vlm", "encdec"):
+                batch["embeds"] = jnp.zeros(
+                    (prompts.shape[0], self.cfg.n_frontend_tokens, self.cfg.d_model),
+                    jnp.dtype(self.cfg.compute_dtype))
+            if self.cfg.family == "encdec":
+                batch = {"embeds": jnp.zeros(
+                    (prompts.shape[0], self.seq_len, self.cfg.d_model),
+                    jnp.dtype(self.cfg.compute_dtype))}
+            logits, cache = self.arts.prefill(self.params, batch)
+            outs = []
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            for _ in range(max_new):
+                outs.append(np.asarray(tok))
+                logits, cache = self.arts.decode(self.params, cache, tok)
+                tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        return np.stack(outs, axis=1)

@@ -1,0 +1,5 @@
+from . import sharding
+from .coded_step import StepArtifacts, make_coded_train_step
+from .trainer import Trainer
+
+__all__ = ["StepArtifacts", "make_coded_train_step", "Trainer", "sharding"]

@@ -1,0 +1,246 @@
+"""The coded train step: the paper's gradient coding wired into a generic
+shard_map train step usable by every zoo architecture.
+
+Layout: batch arrives in the redundant coded layout (n, d, b, ...) — dim 0
+sharded over the data axes (n workers), dim 1 the worker's d assigned
+subsets.  The step (manual over data axes, GSPMD-auto over 'model'):
+
+  1. scans the d subsets, computing each subset's gradient with
+     ``jax.value_and_grad`` (activation memory = 1 subset; compute
+     redundancy d is the paper's intended cost),
+  2. folds each subset gradient into the l/m encoding on the fly with the
+     worker's coefficient rows C[i, j, :] (paper eq. 17/18 — never
+     materializes the (d, l) partial-gradient matrix),
+  3. multiplies by the responder mask (stragglers transmit nothing; proves
+     the decode is independent of straggler payloads),
+  4. decodes the summed gradient with the host-computed float64 weights W
+     (zero rows at stragglers) via the gather or a2a schedule,
+  5. runs the optimizer update (replicated over data axes, model-sharded).
+
+``schedule``:
+  - "gather": paper-faithful master emulation (all_gather encodings, decode
+    locally);
+  - "a2a": beyond-paper TPU-native (all_to_all chunks, decode 1/n slice,
+    all_gather decoded slices) — ~l(1/m+1) bytes received vs ~2l for plain
+    all-reduce;
+  - "psum": uncoded baseline (straggler-aware rho-weighted all-reduce).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import GradCode
+from repro.core import coded_allreduce as ca
+from repro.models import api as model_api
+from repro.optim import Optimizer
+
+from . import sharding
+
+PyTree = Any
+
+# §Perf lever: pin the coded encodings to their model sharding before the
+# manual collective (see _enc_spec below).  Default False = recorded baseline;
+# flipped by the dry-run's --opt enc_constraint.
+ENC_CONSTRAINT = False
+
+
+@dataclasses.dataclass(frozen=True)
+class StepArtifacts:
+    """Everything the launcher needs: the jit-able fn + shardings."""
+    step: Callable
+    in_specs: tuple
+    out_specs: tuple
+    plans: PyTree
+    coded_fraction: float
+
+
+def _data_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def _axis_prod(mesh, axes) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def make_coded_train_step(cfg, code: GradCode, mesh, optimizer: Optimizer,
+                          *, schedule: str = "gather",
+                          grad_scale: float | None = None,
+                          encode_dtype: str = "float32",
+                          use_kernels: bool = False) -> StepArtifacts:
+    """Build the shard_map'd coded train step for one architecture.
+
+    grad_scale: decoded gradients are multiplied by this (default 1/n so the
+    update equals uncoded *mean*-gradient descent when per-subset losses are
+    means; the paper's linear workload uses sum losses and scale 1).
+
+    encode_dtype: wire dtype of the transmitted encodings (the paper uses
+    f32; "bfloat16" halves the collective bytes at ~3 decimal digits of
+    gradient precision — a beyond-paper lever recorded in §Perf).
+    """
+    data_axes = _data_axes(mesh)
+    n = _axis_prod(mesh, data_axes)
+    if code.n != n:
+        raise ValueError(f"code.n={code.n} != data-parallel degree {n}")
+    ms = mesh.shape["model"]
+    loss_fn = model_api.make_loss(cfg)
+    if grad_scale is None:
+        grad_scale = 1.0 if cfg.family == "linear" else 1.0 / n
+
+    # --- shapes / specs ------------------------------------------------
+    pshapes = jax.eval_shape(lambda: model_api.init(jax.random.PRNGKey(0), cfg))
+    pspecs = sharding.param_specs(pshapes, ms)
+    oshapes = jax.eval_shape(optimizer.init, pshapes)
+    ospecs = sharding.opt_state_specs(oshapes, pspecs)
+    n_split = n if schedule == "a2a" else 1
+    plans = ca.plan_tree(pshapes, pspecs, code.m, n_split)
+    coded_frac = ca.coded_fraction(pshapes, plans)
+
+    # §Perf lever (enc_constraint): the encoding of a model-sharded leaf can
+    # silently lose its 'model' sharding at the manual-collective boundary
+    # (GSPMD resharding — grok's 10 TB all-gather).  This computes the spec
+    # each encoding *should* keep: dims = [group_dim] + rest, model entries
+    # preserved.
+    def _enc_spec(pl, spec):
+        if not pl.coded:
+            return None
+        entries = [e if e == "model" else None for e in tuple(spec)]
+        g = entries.pop(pl.group_dim)
+        return P(*([None] + entries))
+
+    enc_specs = jax.tree.map(
+        _enc_spec, plans, pspecs,
+        is_leaf=lambda x: isinstance(x, ca.LeafPlan))
+
+    C = jnp.asarray(code.C, jnp.float32)           # (n, d, m) host constant
+
+    kern = None
+    if use_kernels:
+        from repro.kernels import ops as kern  # lazy: not needed on the CPU path
+
+    def body(params, opt_state, batch, W, mask, rho):
+        # local batch leaves: (1, d, b, ...) -> (d, b, ...)
+        lb = jax.tree.map(lambda x: x[0], batch)
+        idx = ca.coding_worker_index(data_axes)
+        Ci = jax.lax.dynamic_index_in_dim(C, idx, 0, keepdims=False)  # (d, m)
+        rho_i = jax.lax.dynamic_index_in_dim(rho, idx, 0, keepdims=False)  # (d,)
+        mask_i = jax.lax.dynamic_index_in_dim(mask, idx, 0, keepdims=False)
+
+        def per_subset(carry, xs):
+            enc, small, loss_acc = carry
+            sub, cj, rj = xs
+            lval, g = jax.value_and_grad(loss_fn)(params, sub)
+
+            def fold(e, gleaf, pl):
+                if not pl.coded:
+                    return e + rj * gleaf.astype(jnp.float32)
+                contrib = ca.encode_leaf(gleaf.astype(jnp.float32), cj, pl)
+                # contribution arrives as (Dg/m, *rest-moved); match e's layout
+                return e + contrib
+
+            enc = jax.tree.map(fold, enc, g, plans)
+            return (enc, small, loss_acc + rj * lval), None
+
+        def enc0(p, pl):
+            if not pl.coded:
+                return jnp.zeros(p.shape, jnp.float32)
+            x = jnp.moveaxis(jnp.zeros(p.shape, jnp.float32), pl.group_dim, 0)
+            return jnp.zeros((x.shape[0] // code.m, *x.shape[1:]), jnp.float32)
+
+        init = (jax.tree.map(enc0, params, plans), None, jnp.zeros((), jnp.float32))
+        (enc, _, loss_sum), _ = jax.lax.scan(per_subset, init, (lb, Ci, rho_i))
+
+        # stragglers transmit nothing — zero the payload to prove independence
+        wire = jnp.dtype(encode_dtype)
+        enc = jax.tree.map(
+            lambda e, pl: (e * mask_i).astype(wire) if pl.coded else e,
+            enc, plans)
+        if ENC_CONSTRAINT:
+            flat_e, td = jax.tree.flatten(enc)
+            flat_s = td.flatten_up_to(enc_specs)
+            flat_p = [p for p in jax.tree.leaves(
+                plans, is_leaf=lambda x: isinstance(x, ca.LeafPlan))]
+            flat_e = [jax.lax.with_sharding_constraint(e, s)
+                      if (pl.coded and s is not None and "model" in tuple(s))
+                      else e
+                      for e, s, pl in zip(flat_e, flat_s, flat_p)]
+            enc = td.unflatten(flat_e)
+
+        def dec_one(e, pl):
+            if not pl.coded:
+                return jax.lax.psum(e, data_axes)
+            if schedule == "gather":
+                return ca.decode_leaf_gather(e, W, pl, data_axes)
+            if schedule == "a2a":
+                return ca.decode_leaf_a2a(e, W, pl, data_axes, n)
+            raise ValueError(schedule)
+
+        grads = jax.tree.map(dec_one, enc, plans)
+        grads = jax.tree.map(lambda g_: g_ * grad_scale, grads)
+        gnorm = jnp.sqrt(sum(jnp.sum(g_ * g_) for g_ in jax.tree.leaves(grads)))
+        loss_global = jax.lax.psum(loss_sum * mask_i, data_axes) / n  # responders' view
+
+        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        metrics = {"loss": loss_global[None], "grad_norm": gnorm[None]}
+        return new_params, new_opt, metrics
+
+    # psum baseline: plain rho-weighted all-reduce (uncoded / straggler-aware)
+    def body_psum(params, opt_state, batch, W, mask, rho):
+        lb = jax.tree.map(lambda x: x[0], batch)
+        idx = ca.coding_worker_index(data_axes)
+        rho_i = jax.lax.dynamic_index_in_dim(rho, idx, 0, keepdims=False)
+        mask_i = jax.lax.dynamic_index_in_dim(mask, idx, 0, keepdims=False)
+
+        def per_subset(carry, xs):
+            acc, loss_acc = carry
+            sub, rj = xs
+            lval, g = jax.value_and_grad(loss_fn)(params, sub)
+            acc = jax.tree.map(lambda a, g_: a + rj * g_.astype(jnp.float32), acc, g)
+            return (acc, loss_acc + rj * lval), None
+
+        init = (jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+                jnp.zeros((), jnp.float32))
+        (acc, loss_sum), _ = jax.lax.scan(per_subset, init, (lb, rho_i))
+        grads = jax.tree.map(lambda a: jax.lax.psum(a, data_axes) * grad_scale, acc)
+        gnorm = jnp.sqrt(sum(jnp.sum(g_ * g_) for g_ in jax.tree.leaves(grads)))
+        loss_global = jax.lax.psum(loss_sum * mask_i, data_axes) / n
+        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        return new_params, new_opt, {"loss": loss_global[None], "grad_norm": gnorm[None]}
+
+    fn = body_psum if schedule == "psum" else body
+
+    # --- wrap in shard_map over the data axes (model stays auto/GSPMD) --
+    # shard_map's in/out_specs may only mention the manual (data) axes; the
+    # 'model' placement is carried by the jit in_shardings (GSPMD auto).
+    def _strip(tree):
+        keep = set(data_axes)
+
+        def f(s):
+            def ok(e):
+                if e is None:
+                    return None
+                if isinstance(e, tuple):
+                    return e if all(x in keep for x in e) else None
+                return e if e in keep else None
+            return P(*[ok(e) for e in s])
+
+        return jax.tree.map(f, tree, is_leaf=lambda x: isinstance(x, P))
+
+    def make(batch_shapes):
+        bspecs = sharding.batch_specs(batch_shapes, data_axes)
+        in_specs = (pspecs, ospecs, bspecs, P(), P(), P())
+        out_specs = (pspecs, ospecs, {"loss": P(), "grad_norm": P()})
+        smapped = jax.shard_map(fn, mesh=mesh,
+                                in_specs=_strip(in_specs),
+                                out_specs=_strip(out_specs),
+                                axis_names=set(data_axes), check_vma=False)
+        return smapped, in_specs, out_specs
+
+    return StepArtifacts(step=make, in_specs=(pspecs, ospecs), out_specs=None,
+                         plans=plans, coded_fraction=coded_frac)

@@ -1,0 +1,119 @@
+"""High-level training driver: wires the data pipeline, coded step, straggler
+simulation, and (optional) checkpointing into a run loop.
+
+Stragglers: each step draws a straggler set (up to the code's s) from a
+configurable process (none / fixed / random), computes the host-side float64
+decode weights for that responder pattern, and feeds them to the jitted step
+(the device graph is static across patterns).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import time
+from typing import Any, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import GradCode
+from repro.core.coded_allreduce import make_step_inputs
+from repro.data import CodedBatcher
+from repro.optim import Optimizer
+
+from .coded_step import make_coded_train_step
+
+
+@dataclasses.dataclass
+class Trainer:
+    cfg: Any
+    code: GradCode
+    mesh: Any
+    optimizer: Optimizer
+    schedule: str = "gather"
+    straggler_mode: str = "none"       # none | random | fixed
+    fixed_stragglers: tuple = ()
+    seed: int = 0
+    checkpoint_dir: str | None = None
+    checkpoint_every: int = 0
+
+    def __post_init__(self):
+        from repro.models import api as model_api
+        self.arts = make_coded_train_step(self.cfg, self.code, self.mesh,
+                                          self.optimizer, schedule=self.schedule)
+        self.batcher = CodedBatcher(self.code)
+        key = jax.random.PRNGKey(self.seed)
+        with jax.sharding.set_mesh(self.mesh):
+            self.params = model_api.init(key, self.cfg)
+            self.opt_state = self.optimizer.init(self.params)
+        self._jitted = {}
+        self._rng = np.random.default_rng(self.seed + 1)
+        self._step_count = 0
+        self._ckpt = None
+        if self.checkpoint_dir:
+            from repro.checkpoint import CheckpointManager
+            self._ckpt = CheckpointManager(self.checkpoint_dir)
+            restored = self._ckpt.restore_latest(
+                {"params": self.params, "opt_state": self.opt_state})
+            if restored is not None:
+                state, meta = restored
+                with jax.sharding.set_mesh(self.mesh):
+                    self.params = jax.tree.map(jnp.asarray, state["params"])
+                    self.opt_state = jax.tree.map(jnp.asarray, state["opt_state"])
+                self._step_count = int(meta.get("step", 0))
+
+    def maybe_checkpoint(self, force: bool = False) -> None:
+        if self._ckpt is None:
+            return
+        if force or (self.checkpoint_every
+                     and self._step_count % self.checkpoint_every == 0):
+            self._ckpt.save(self._step_count,
+                            {"params": self.params, "opt_state": self.opt_state},
+                            {"arch": self.cfg.name})
+
+    # ---------------------------------------------------------------- steps
+    def _stragglers(self) -> list[int]:
+        if self.straggler_mode == "none" or self.code.s == 0:
+            return []
+        if self.straggler_mode == "fixed":
+            return list(self.fixed_stragglers)
+        k = self._rng.integers(0, self.code.s + 1)
+        return list(self._rng.choice(self.code.n, size=k, replace=False))
+
+    def step(self, batch: dict[str, np.ndarray]) -> dict[str, float]:
+        placed = self.batcher.place(batch)
+        shapes = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), placed)
+        keyshape = tuple(sorted((k, v.shape) for k, v in placed.items()))
+        if keyshape not in self._jitted:
+            smapped, in_specs, _ = self.arts.step(shapes)
+            self._jitted[keyshape] = jax.jit(smapped, donate_argnums=(0, 1))
+        fn = self._jitted[keyshape]
+        inp = make_step_inputs(self.code, self._stragglers())
+        with jax.sharding.set_mesh(self.mesh):
+            self.params, self.opt_state, metrics = fn(
+                self.params, self.opt_state,
+                jax.tree.map(jnp.asarray, placed),
+                jnp.asarray(inp["W"]), jnp.asarray(inp["mask"]),
+                jnp.asarray(inp["rho"]))
+        self._step_count += 1
+        self.maybe_checkpoint()
+        return {k: float(v[0]) for k, v in metrics.items()}
+
+    def run(self, stream: Iterator[dict[str, np.ndarray]], steps: int,
+            log_every: int = 10, log_path: str | None = None) -> list[dict]:
+        logs = []
+        t0 = time.time()
+        for i in range(steps):
+            m = self.step(next(stream))
+            m["step"] = i
+            m["wall"] = time.time() - t0
+            logs.append(m)
+            if log_every and i % log_every == 0:
+                print(f"step {i:5d} loss {m['loss']:.4f} "
+                      f"gnorm {m['grad_norm']:.3e} t {m['wall']:.1f}s")
+        if log_path:
+            pathlib.Path(log_path).write_text(json.dumps(logs))
+        return logs

@@ -1,0 +1,8 @@
+# The distributed-train tests (tests/test_coded_train.py) need a small
+# multi-device mesh; JAX locks the host device count at first init, so it
+# must be set before any jax import.  NOTE: this is 8 lightweight host
+# devices for unit tests — NOT the 512-device dry-run flag, which only
+# repro.launch.dryrun sets for itself.
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")

@@ -1,0 +1,101 @@
+"""Per-architecture smoke tests (assignment deliverable f): instantiate the
+REDUCED variant of each assigned architecture, run one forward/train step and
+one prefill+decode step on CPU, assert output shapes and no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.data import make_synthetic_batch
+from repro.models import api
+
+
+def _batch(cfg, B=2, S=32, seed=0):
+    rng = np.random.default_rng(seed)
+    return {k: jnp.asarray(v) for k, v in
+            make_synthetic_batch(rng, cfg, B, S).items()}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_train_step(arch):
+    cfg = get_config(arch).reduced()
+    assert cfg.n_layers <= 2 and cfg.d_model <= 512
+    if cfg.n_experts:
+        assert cfg.n_experts <= 4
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg)
+    loss_fn = api.make_loss(cfg)
+    loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{arch}: non-finite loss"
+    leaves = jax.tree.leaves(grads)
+    assert leaves and all(bool(jnp.all(jnp.isfinite(g))) for g in leaves)
+    # one SGD step moves the loss
+    new = jax.tree.map(lambda p, g: p - 0.05 * g, params, grads)
+    assert float(loss_fn(new, batch)) < float(loss) + 1e-3
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_serve_step(arch):
+    cfg = get_config(arch).reduced()
+    params = api.init(jax.random.PRNGKey(1), cfg)
+    B, S = 2, 16
+    batch = _batch(cfg, B, S, seed=1)
+    batch.pop("labels", None)
+    logits, cache = api.make_prefill(cfg, 32)(params, batch)
+    assert logits.shape == (B, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    dec = api.make_decode(cfg)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    for _ in range(2):
+        logits, cache = dec(params, cache, tok)
+        assert logits.shape == (B, cfg.vocab)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "olmoe-1b-7b", "zamba2-1.2b",
+                                  "internvl2-26b"])
+def test_sliding_window_decode(arch):
+    """long_500k path: decode against a ring-buffer window cache."""
+    cfg = get_config(arch).reduced()
+    params = api.init(jax.random.PRNGKey(2), cfg)
+    B, w = 2, 8
+    mod = api.get_module(cfg)
+    if cfg.family == "hybrid":
+        cache = mod.init_state(cfg, B, 64, window=w)
+    else:
+        cache = mod.init_cache(cfg, B, 64, window=w)
+    cache = dict(cache, pos=jnp.asarray(20, jnp.int32))  # past the window
+    dec = api.make_decode(cfg, window=w)
+    logits, cache2 = dec(params, cache, jnp.zeros((B,), jnp.int32))
+    assert logits.shape == (B, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert int(cache2["pos"]) == 21
+
+
+def test_full_configs_match_assignment():
+    spec = {
+        "internvl2-26b": (48, 6144, 48, 8, 16384, 92553),
+        "qwen2-72b": (80, 8192, 64, 8, 29568, 152064),
+        "qwen3-8b": (36, 4096, 32, 8, 12288, 151936),
+        "whisper-tiny": (4, 384, 6, 6, 1536, 51865),
+        "olmoe-1b-7b": (16, 2048, 16, 16, 1024, 50304),
+        "grok-1-314b": (64, 6144, 48, 8, 32768, 131072),
+        "xlstm-350m": (24, 1024, 4, 4, 0, 50304),
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+        "qwen3-1.7b": (28, 2048, 16, 8, 6144, 151936),
+        "granite-34b": (88, 6144, 48, 1, 24576, 49152),
+    }
+    for arch, (L, D, H, KV, F, V) in spec.items():
+        cfg = get_config(arch)
+        assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                cfg.d_ff, cfg.vocab) == (L, D, H, KV, F, V), arch
+    assert get_config("olmoe-1b-7b").n_experts == 64
+    assert get_config("olmoe-1b-7b").top_k == 8
+    assert get_config("grok-1-314b").n_experts == 8
+    assert get_config("grok-1-314b").top_k == 2
+    assert get_config("zamba2-1.2b").ssm_state == 64
+    assert get_config("qwen2-72b").qkv_bias
+    assert get_config("qwen3-8b").qk_norm

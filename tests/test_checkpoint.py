@@ -1,0 +1,64 @@
+"""Checkpoint subsystem: roundtrip fidelity, atomicity conventions,
+retention, trainer resume."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, restore_tree, save_tree
+from repro.configs import get_config
+from repro.core import make_code
+from repro.data import make_synthetic_batch
+from repro.launch.mesh import make_local_mesh
+from repro.models import api as model_api
+from repro.optim import get_optimizer
+from repro.train import Trainer
+
+
+def test_save_restore_roundtrip(tmp_path):
+    cfg = get_config("qwen3-1.7b").reduced()
+    params = model_api.init(jax.random.PRNGKey(0), cfg)
+    p = tmp_path / "ckpt.npz"
+    save_tree(p, params, {"note": "hi"})
+    restored, meta = restore_tree(p, params)
+    assert meta["note"] == "hi"
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restore_shape_mismatch_rejected(tmp_path):
+    tree = {"w": jnp.ones((4, 4))}
+    p = tmp_path / "c.npz"
+    save_tree(p, tree)
+    with pytest.raises(ValueError):
+        restore_tree(p, {"w": jnp.ones((4, 5))})
+    with pytest.raises(KeyError):
+        restore_tree(p, {"w2": jnp.ones((4, 4))})
+
+
+def test_manager_retention(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, {"x": jnp.full((2,), s)})
+    assert mgr.steps() == [3, 4]
+    restored, meta = mgr.restore_latest({"x": jnp.zeros((2,))})
+    assert meta["step"] == 4
+    assert float(restored["x"][0]) == 4.0
+
+
+def test_trainer_resume(tmp_path):
+    cfg = get_config("qwen3-1.7b").reduced()
+    code = make_code(4, 3, 1, 2)
+    mesh = make_local_mesh(4, 2)
+    kw = dict(checkpoint_dir=str(tmp_path), checkpoint_every=2, seed=0)
+    tr = Trainer(cfg, code, mesh, get_optimizer("sgd", 1e-2), **kw)
+    rng = np.random.default_rng(0)
+    batch = make_synthetic_batch(rng, cfg, 8, 16)
+    for _ in range(4):
+        tr.step(batch)
+    assert tr._ckpt.latest_step() == 4
+    # a fresh trainer resumes from step 4 with identical params
+    tr2 = Trainer(cfg, code, mesh, get_optimizer("sgd", 1e-2), **kw)
+    assert tr2._step_count == 4
+    for a, b in zip(jax.tree.leaves(tr.params), jax.tree.leaves(tr2.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,173 @@
+"""Exact-recovery and structural tests for the core coding library."""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import GradCode, cyclic, make_code, polynomial, random_code, uncoded
+
+
+def _exhaustive_straggler_sets(n, s, cap=64):
+    combos = list(itertools.combinations(range(n), s))
+    if len(combos) > cap:
+        rng = np.random.default_rng(0)
+        idx = rng.choice(len(combos), size=cap, replace=False)
+        combos = [combos[i] for i in idx]
+    return combos
+
+
+@pytest.mark.parametrize("kind", ["poly", "random"])
+@pytest.mark.parametrize("n,d,s,m", [
+    (5, 3, 1, 2), (5, 3, 2, 1), (5, 5, 2, 3),
+    (8, 4, 1, 3), (8, 2, 0, 2), (10, 4, 1, 3),
+    (16, 6, 2, 4),
+])
+def test_any_n_minus_s_recovery(kind, n, d, s, m):
+    """Definition 1: the sum is recoverable from ANY n-s encodings."""
+    code = GradCode(n=n, d=d, s=s, m=m, kind=kind)
+    rng = np.random.default_rng(42)
+    l = 6 * m
+    G = rng.standard_normal((n, l))
+    F = code.encode(G)
+    truth = G.sum(axis=0)
+    # Vandermonde conditioning degrades with n (paper Sec. III-C: fine to
+    # n<=20 at <0.2% relative error); random codes stay tight.
+    tol = (5e-3 if (kind == "poly" and n >= 16) else 5e-7) * max(1, np.abs(truth).max())
+    for st in _exhaustive_straggler_sets(n, s):
+        resp = np.setdiff1d(np.arange(n), st)
+        Fc = F.copy()
+        Fc[list(st)] = 1e12  # garbage from stragglers must not leak in
+        got = code.decode(Fc, resp)
+        np.testing.assert_allclose(got, truth, rtol=0, atol=tol)
+
+
+@pytest.mark.parametrize("kind", ["poly", "random"])
+def test_encoder_reads_only_assigned_subsets(kind):
+    """f_i must depend only on the d cyclic subsets assigned to worker i."""
+    n, d, s, m = 7, 4, 2, 2
+    code = GradCode(n=n, d=d, s=s, m=m, kind=kind)
+    P = code.B @ code.V  # (m*n, n)
+    nz = (np.abs(P.reshape(n, m, n)).max(axis=1) > 1e-8).T  # (worker, dataset)
+    assert (nz == code.assignment).all()
+
+
+def test_transmission_dimension():
+    code = GradCode(n=8, d=5, s=2, m=3)
+    G = np.ones((8, 12))
+    F = code.encode(G)
+    assert F.shape == (8, 4)  # l/m = 12/3
+
+
+@pytest.mark.parametrize("n,d,s,m", [(6, 6, 5, 1), (6, 6, 0, 6), (4, 1, 0, 1)])
+def test_degenerate_corners(n, d, s, m):
+    code = GradCode(n=n, d=d, s=s, m=m)
+    rng = np.random.default_rng(1)
+    G = rng.standard_normal((n, 2 * m))
+    F = code.encode(G)
+    resp = np.arange(s, n)
+    np.testing.assert_allclose(code.decode(F, resp), G.sum(0), atol=1e-6)
+
+
+def test_uncoded_is_identity_sum():
+    code = uncoded(4)
+    G = np.arange(16, dtype=np.float64).reshape(4, 4)
+    F = code.encode(G)
+    # d=1, m=1: f_i proportional to g_i with unit coefficient (leading coeff 1
+    # times identity block); decoding with all workers gives the plain sum.
+    np.testing.assert_allclose(code.decode(F, np.arange(4)), G.sum(0), atol=1e-8)
+
+
+def test_make_code_stability_default():
+    assert make_code(16, 5, 1, 4).kind == "poly"
+    assert make_code(32, 12, 4, 8).kind == "random"
+
+
+def test_more_responders_than_needed_ok():
+    """With fewer actual stragglers than the design s, decode still works."""
+    code = GradCode(n=8, d=4, s=2, m=2)
+    rng = np.random.default_rng(3)
+    G = rng.standard_normal((8, 8))
+    F = code.encode(G)
+    got = code.decode(F, np.arange(8))  # zero stragglers
+    np.testing.assert_allclose(got, G.sum(0), atol=1e-8)
+
+
+def test_too_few_responders_raises():
+    code = GradCode(n=8, d=4, s=2, m=2)
+    with pytest.raises(ValueError):
+        code.decode_weights(np.arange(5))  # need >= 6
+
+
+def test_invalid_triple_raises():
+    with pytest.raises(ValueError):
+        GradCode(n=8, d=3, s=2, m=2)  # d != s+m
+    with pytest.raises(ValueError):
+        GradCode(n=8, d=9, s=1, m=8)  # d > n
+
+
+# ------------------------------------------------------- paper worked example
+def test_fig2_example_n5_d3():
+    """Fig. 2: n=k=5, d=3, theta = (-2,-1,0,1,2); both (s,m) operating points."""
+    thetas = np.array([-2.0, -1.0, 0.0, 1.0, 2.0])
+    rng = np.random.default_rng(7)
+    l = 2
+    G = rng.standard_normal((5, l))
+    # (a) s=2, m=1: any 3 of 5 workers suffice
+    B = polynomial.build_B(5, 3, 2, 1, thetas)
+    V = polynomial.vandermonde(5, 2, thetas)
+    Z = G.T  # (l, n) with m=1: z_v = (g_1(v), ..., g_n(v))
+    Fm = Z @ B @ V  # (l, n): column i = f_i
+    for st in itertools.combinations(range(5), 2):
+        resp = sorted(set(range(5)) - set(st))
+        A = V[:, resp]
+        W = np.linalg.solve(A, np.eye(3)[:, 2:])  # e_{n-d+1} (0-based col 2)
+        got = Fm[:, resp] @ W
+        np.testing.assert_allclose(got[:, 0], G.sum(0), atol=1e-9)
+    # (b) s=1, m=2: any 4 of 5, each transmits l/2 scalars
+    B2 = polynomial.build_B(5, 3, 1, 2, thetas)
+    V2 = polynomial.vandermonde(5, 1, thetas)
+    z = G.reshape(5, l // 2, 2).transpose(1, 0, 2).reshape(l // 2, 10)  # (l/2, mn)
+    Fm2 = z @ B2 @ V2  # (l/2, n)
+    for st in range(5):
+        resp = sorted(set(range(5)) - {st})
+        A = V2[:, resp]  # (4, 4)
+        W = np.linalg.solve(A, np.eye(4)[:, 2:4])  # columns n-d..n-d+m-1 = 2,3
+        got = Fm2[:, resp] @ W  # (l/2, 2)
+        np.testing.assert_allclose(got.reshape(-1), G.sum(0), atol=1e-9)
+
+
+def test_cyclic_assignment_consistency():
+    n, d = 9, 4
+    A = cyclic.assignment_matrix(n, d)
+    assert A.sum() == n * d
+    for j in range(n):
+        assert A[:, j].sum() == d  # every subset replicated d times (Claim 1 floor)
+    P = cyclic.placement_indices(n, d)
+    for i in range(n):
+        assert set(P[i]) == {(i + j) % n for j in range(d)}
+
+
+def test_random_scheme_orthogonality():
+    code = GradCode(n=12, d=5, s=2, m=3, kind="random")
+    random_code.verify_orthogonality(12, 5, 3, code.V, code.B)
+
+
+def test_vandermonde_instability_vs_random_extreme_corner():
+    """Paper Sec. III-C / IV-A: the Vandermonde scheme loses precision at
+    aggressive parameters while the Gaussian random scheme stays exact.
+    (n=16, d=9, s=1, m=8): poly relative error is O(1e-2) or worse; random
+    stays below 1e-8.  This is the boundary that motivates Theorem 2."""
+    from repro.core import stability
+    poly_err = stability.worst_decode_relative_error(
+        GradCode(n=16, d=9, s=1, m=8, kind="poly"), l=48, trials=16)
+    rand_err = stability.worst_decode_relative_error(
+        GradCode(n=16, d=9, s=1, m=8, kind="random"), l=48, trials=16)
+    assert poly_err > 1e-3
+    assert rand_err < 1e-8
+
+
+def test_decode_weights_zero_rows_at_stragglers():
+    code = GradCode(n=8, d=4, s=2, m=2)
+    W = code.decode_weights(np.array([0, 1, 2, 3, 4, 5]))
+    assert np.all(W[6:] == 0.0)
+    assert np.any(W[:6] != 0.0)

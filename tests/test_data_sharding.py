@@ -1,0 +1,119 @@
+"""Data pipeline placement + sharding-rule unit tests (with hypothesis
+properties on the placement bijection)."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.core import make_code
+from repro.core.coded_allreduce import plan_tree
+from repro.data import CodedBatcher, make_synthetic_batch
+from repro.models import api as model_api
+from repro.train import sharding
+
+
+# ------------------------------------------------------------ CodedBatcher
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(2, 12), dm=st.tuples(st.integers(1, 6), st.integers(1, 4)),
+       b=st.integers(1, 3))
+def test_placement_covers_every_subset_d_times(n, dm, b):
+    d_extra, m = dm
+    m = min(m, n)
+    d = min(n, m + d_extra - 1)
+    if d < m:
+        return
+    code = make_code(n, d, d - m, m)
+    batcher = CodedBatcher(code)
+    x = np.arange(n * b, dtype=np.int64)[:, None] * np.ones((1, 3))
+    placed = batcher.place({"x": x})["x"]        # (n, d, b, 3)
+    assert placed.shape == (n, d, b, 3)
+    # worker i's slot j holds subset (i+j) % n
+    for i in range(n):
+        for j in range(d):
+            sub = (i + j) % n
+            np.testing.assert_array_equal(placed[i, j, :, 0],
+                                          np.arange(sub * b, (sub + 1) * b))
+    # every subset appears exactly d times
+    ids = placed[:, :, 0, 0] // b
+    counts = np.bincount(ids.astype(int).ravel(), minlength=n)
+    assert (counts == d).all()
+
+
+def test_place_rejects_indivisible_batch():
+    code = make_code(4, 3, 1, 2)
+    with pytest.raises(ValueError):
+        CodedBatcher(code).place({"x": np.zeros((7, 2))})
+
+
+def test_synthetic_batches_have_expected_keys():
+    rng = np.random.default_rng(0)
+    for arch, keys in [("qwen3-8b", {"tokens", "labels"}),
+                       ("internvl2-26b", {"tokens", "labels", "embeds"}),
+                       ("whisper-tiny", {"tokens", "labels", "embeds"})]:
+        cfg = get_config(arch).reduced()
+        assert set(make_synthetic_batch(rng, cfg, 4, 16)) == keys
+
+
+# ------------------------------------------------------------ param specs
+def test_param_specs_respect_divisibility():
+    cfg = get_config("qwen2-72b")  # kv=8 < 16 -> kv heads replicated
+    shapes = jax.eval_shape(lambda: model_api.init(jax.random.PRNGKey(0), cfg))
+    specs = sharding.param_specs(shapes, 16)
+    flat = jax.tree_util.tree_flatten_with_path(specs)[0]
+    for path, spec in flat:
+        leaf = shapes
+        for p in path:
+            leaf = leaf[p.key]
+        for dim, entry in enumerate(spec):
+            if entry == "model":
+                assert leaf.shape[dim] % 16 == 0, (path, leaf.shape, spec)
+    # q heads (64) sharded, kv heads (8) replicated
+    attn = specs["layers"]["attn"]
+    assert attn["wq"][2] == "model"
+    assert attn["wk"][2] is None
+    assert specs["embed"][0] == "model"          # vocab parallel
+    assert specs["unembed"][1] == "model"
+
+
+def test_param_specs_moe_expert_axis():
+    specs64 = sharding.param_specs(
+        jax.eval_shape(lambda: model_api.init(
+            jax.random.PRNGKey(0), get_config("olmoe-1b-7b"))), 16)
+    assert specs64["layers"]["moe"]["w_gate"][1] == "model"   # 64 experts
+    specs8 = sharding.param_specs(
+        jax.eval_shape(lambda: model_api.init(
+            jax.random.PRNGKey(0), get_config("grok-1-314b"))), 16)
+    # 8 experts not divisible by 16 -> shard d_ff instead
+    assert specs8["layers"]["moe"]["w_gate"][1] is None
+    assert specs8["layers"]["moe"]["w_gate"][3] == "model"
+
+
+def test_plan_tree_picks_model_replicated_dim():
+    cfg = get_config("qwen3-1.7b")
+    shapes = jax.eval_shape(lambda: model_api.init(jax.random.PRNGKey(0), cfg))
+    specs = sharding.param_specs(shapes, 16)
+    plans = plan_tree(shapes, specs, m=2)
+    flat_sh = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    flat_pl = jax.tree.leaves(plans, is_leaf=lambda x: hasattr(x, "coded"))
+    flat_sp = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    n_coded = 0
+    for (path, sh), pl, sp in zip(flat_sh, flat_pl, flat_sp):
+        if pl.coded:
+            n_coded += 1
+            assert sh.shape[pl.group_dim] % 2 == 0
+            assert sp[pl.group_dim] is None, (path, sp, pl)
+    assert n_coded > 0
+
+
+def test_cache_specs_batch_and_model_dims():
+    cfg = get_config("qwen3-8b")
+    cshapes = model_api.cache_spec(cfg, 128, 32768)
+    specs = sharding.cache_specs(cshapes, ("data",), 16, 16)
+    assert specs["k"][1] == "data"
+    assert "model" in tuple(specs["k"])
+    # batch=1 long context: replicate batch
+    cshapes1 = model_api.cache_spec(cfg, 1, 524288, window=4096)
+    specs1 = sharding.cache_specs(cshapes1, ("data",), 16, 16)
+    assert specs1["k"][1] is None

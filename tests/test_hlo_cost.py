@@ -1,0 +1,71 @@
+"""Validation of the loop-aware HLO cost analyzer against closed-form cases:
+scan FLOPs multiply by trip count; collective bytes match shapes, including
+collectives inside scanned bodies (which XLA's cost_analysis misses)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch import hlo_cost
+
+
+def test_scan_flops_multiplied_by_trip_count():
+    L, B, D = 28, 4, 128
+    W = jax.ShapeDtypeStruct((L, D, D), jnp.float32)
+    x = jax.ShapeDtypeStruct((B, D), jnp.float32)
+
+    def scanned(W, x):
+        return jax.lax.scan(lambda h, w: (jnp.tanh(h @ w), None), x, W)[0]
+
+    c = jax.jit(scanned).lower(W, x).compile()
+    r = hlo_cost.analyze(c.as_text())
+    want = L * 2 * B * D * D
+    assert r["flops"] == want
+    # XLA's own counter sees the body once — document the discrepancy
+    assert c.cost_analysis()["flops"] < want / (L / 2)
+
+
+def _mesh():
+    if len(jax.devices()) < 4:
+        pytest.skip("needs 4 devices")
+    return jax.make_mesh((2, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def test_collective_bytes_from_shapes():
+    mesh = _mesh()
+    x = jax.ShapeDtypeStruct((4, 128), jnp.float32)
+
+    def coll(x):
+        def body(h):
+            g = jax.lax.all_gather(h, "data")
+            return jax.lax.psum(g.sum(0), "data")
+        return jax.shard_map(body, mesh=mesh, in_specs=P("data"),
+                             out_specs=P(), axis_names={"data"},
+                             check_vma=False)(x)
+
+    c = jax.jit(coll, in_shardings=(NamedSharding(mesh, P("data", None)),)) \
+        .lower(x).compile()
+    r = hlo_cost.analyze(c.as_text())
+    assert r["collective_bytes"]["all-gather"] == 2 * 2 * 128 * 4
+    assert r["collective_bytes"]["all-reduce"] == 2 * 128 * 4
+
+
+def test_collective_inside_scan_multiplied():
+    mesh = _mesh()
+    x = jax.ShapeDtypeStruct((4, 128), jnp.float32)
+    T = 7
+
+    def collscan(x):
+        def body(h):
+            return jax.lax.scan(lambda c, _: (jax.lax.psum(c, "data"), None),
+                                h, None, length=T)[0]
+        return jax.shard_map(body, mesh=mesh, in_specs=P("data"),
+                             out_specs=P("data"), axis_names={"data"},
+                             check_vma=False)(x)
+
+    c = jax.jit(collscan, in_shardings=(NamedSharding(mesh, P("data", None)),)) \
+        .lower(x).compile()
+    r = hlo_cost.analyze(c.as_text())
+    assert r["collective_bytes"]["all-reduce"] == T * 2 * 128 * 4
+    assert r["collective_counts"]["all-reduce"] == T

@@ -1,0 +1,61 @@
+"""Structural invariants of the recursive polynomial construction (Sec. III)."""
+import numpy as np
+import pytest
+
+from repro.core import polynomial
+
+
+@pytest.mark.parametrize("n,d,s,m", [
+    (5, 3, 1, 2), (8, 4, 1, 3), (8, 8, 4, 4), (10, 6, 2, 4),
+    (16, 9, 1, 8), (16, 3, 1, 2), (20, 10, 5, 5),
+])
+def test_construction_invariants(n, d, s, m):
+    polynomial.verify_construction(n, d, s, m)
+
+
+def test_thetas_eq23():
+    t = polynomial.default_thetas(6)
+    assert set(np.round(t, 3)) == {1.0, -1.0, 1.5, -1.5, 2.0, -2.0}
+    t = polynomial.default_thetas(5)
+    assert set(np.round(t, 3)) == {0.0, 1.0, -1.0, 1.5, -1.5}
+
+
+def test_base_polynomials_roots_and_degree():
+    n, d = 7, 3
+    th = polynomial.default_thetas(n)
+    P = polynomial.base_polynomials(n, d, th)
+    assert P.shape == (n, n - d + 1)
+    np.testing.assert_allclose(P[:, -1], 1.0)  # monic
+    for i in range(n):
+        for j in range(1, n - d + 1):
+            val = np.polyval(P[i][::-1], th[(i + j) % n])
+            assert abs(val) < 1e-9
+        # not a root at the worker's own point
+        assert abs(np.polyval(P[i][::-1], th[i])) > 1e-6
+
+
+def test_B_shape_and_identity_tail():
+    n, d, s, m = 9, 5, 2, 3
+    B = polynomial.build_B(n, d, s, m)
+    assert B.shape == (m * n, n - s)
+    tail = B[:, n - d:].reshape(n, m, m)
+    np.testing.assert_allclose(tail, np.tile(np.eye(m), (n, 1, 1)), atol=1e-10)
+
+
+def test_recursion_matches_eq9():
+    """p^{(u)} = x p^{(u-1)} - c * p^{(1)} with c the x^{n-d} coeff of x p^{(u-1)}."""
+    n, d, s, m = 8, 5, 1, 4
+    th = polynomial.default_thetas(n)
+    B = polynomial.build_B(n, d, s, m, th)
+    for i in range(n):
+        for u in range(1, m):
+            prev = B[i * m + u - 1]
+            base = B[i * m]
+            shifted = np.concatenate([[0.0], prev[:-1]])
+            expect = shifted - shifted[n - d] * base
+            np.testing.assert_allclose(B[i * m + u], expect, atol=1e-9)
+
+
+def test_build_B_requires_optimal_frontier():
+    with pytest.raises(ValueError):
+        polynomial.build_B(8, 5, 1, 3)  # d != s + m

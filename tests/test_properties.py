@@ -1,0 +1,104 @@
+"""Hypothesis property-based tests on the system's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import GradCode, tradeoff
+from repro.core.coded_allreduce import LeafPlan, plan_leaf
+
+
+# ---------------------------------------------------------- valid-triple gen
+@st.composite
+def triples(draw, max_n=12):
+    n = draw(st.integers(3, max_n))
+    d = draw(st.integers(1, n))
+    m = draw(st.integers(1, d))
+    s = d - m
+    kind = draw(st.sampled_from(["poly", "random"]))
+    return n, d, s, m, kind
+
+
+@settings(max_examples=40, deadline=None)
+@given(triples(), st.integers(0, 2**31 - 1))
+def test_linearity_of_encoder(t, seed):
+    """Condition 3 of Definition 1: f_i is linear in the partial gradients."""
+    n, d, s, m, kind = t
+    code = GradCode(n=n, d=d, s=s, m=m, kind=kind)
+    rng = np.random.default_rng(seed)
+    l = 2 * m
+    G1, G2 = rng.standard_normal((2, n, l))
+    a, b = rng.standard_normal(2)
+    lhs = code.encode(a * G1 + b * G2)
+    rhs = a * code.encode(G1) + b * code.encode(G2)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-9, atol=1e-6 * np.abs(rhs).max())
+
+
+@settings(max_examples=40, deadline=None)
+@given(triples(max_n=10), st.integers(0, 2**31 - 1))
+def test_recovery_random_straggler_set(t, seed):
+    n, d, s, m, kind = t
+    code = GradCode(n=n, d=d, s=s, m=m, kind=kind)
+    rng = np.random.default_rng(seed)
+    l = 4 * m
+    G = rng.standard_normal((n, l))
+    F = code.encode(G)
+    st_set = rng.choice(n, size=s, replace=False) if s else np.array([], int)
+    F[st_set] = np.nan
+    resp = np.setdiff1d(np.arange(n), st_set)
+    got = code.decode(np.nan_to_num(F, nan=7e7), resp)
+    truth = G.sum(0)
+    assert np.isfinite(got).all()
+    tol = 1e-4 * max(1.0, np.abs(truth).max())
+    if kind == "poly" and n >= 10 and m >= n // 2:
+        tol = 0.05 * max(1.0, np.abs(truth).max())  # paper's instability regime
+    np.testing.assert_allclose(got, truth, rtol=0, atol=tol)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(2, 64), st.integers(2, 64), st.integers(1, 16), st.integers(0, 16))
+def test_tradeoff_consistency(n, k, d, s):
+    """max_s / min_d / is_achievable agree with eq. (4)."""
+    for m in range(1, 5):
+        ach = tradeoff.is_achievable(n, k, d, s, m)
+        assert ach == (1 <= d <= k and d * n >= k * (s + m))
+        if ach:
+            assert tradeoff.min_d(n, k, s, m) <= d
+            assert tradeoff.max_s(n, k, d, m) >= s
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(3, 10))
+def test_frontier_is_tight(n):
+    """Every frontier triple satisfies eq. (5) with equality: d = s + m."""
+    for (d, s, m) in tradeoff.frontier(n):
+        assert d == s + m
+        assert tradeoff.is_achievable(n, n, d, s, m)
+        assert not tradeoff.is_achievable(n, n, d, s + 1, m)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    st.lists(st.integers(1, 512), min_size=1, max_size=4),
+    st.sampled_from([1, 2, 4, 8]),
+    st.sampled_from([1, 4, 16]),
+)
+def test_plan_leaf_divisibility(shape, m, n_split):
+    plan = plan_leaf(tuple(shape), None, m, n_split)
+    if plan.coded:
+        assert shape[plan.group_dim] % (m * n_split) == 0
+    else:
+        assert all(sz % (m * n_split) != 0 for sz in shape)
+
+
+@settings(max_examples=30, deadline=None)
+@given(triples(max_n=8), st.integers(0, 2**31 - 1))
+def test_decode_is_permutation_invariant(t, seed):
+    """Responder ordering must not change the reconstruction."""
+    n, d, s, m, kind = t
+    code = GradCode(n=n, d=d, s=s, m=m, kind=kind)
+    rng = np.random.default_rng(seed)
+    G = rng.standard_normal((n, 2 * m))
+    F = code.encode(G)
+    resp = np.setdiff1d(np.arange(n), rng.choice(n, size=s, replace=False) if s else [])
+    a = code.decode(F, resp)
+    b = code.decode(F, rng.permutation(resp))
+    np.testing.assert_allclose(a, b, atol=1e-8 * max(1, np.abs(a).max()))

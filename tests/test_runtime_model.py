@@ -1,0 +1,106 @@
+"""Section VI runtime model: paper table reproduction + closed-form regimes."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import runtime_model as rm
+
+
+PAPER_N8 = rm.RuntimeParams(n=8, lambda1=0.8, lambda2=0.1, t1=1.6, t2=6.0)
+
+# Entire first/diagonal structure of the paper's Section VI-A table (m rows,
+# d columns) — spot-check a representative subset at 4-decimal precision.
+PAPER_TABLE_ENTRIES = [
+    (1, 1, 36.1138), (2, 1, 29.2288), (3, 1, 27.3351), (4, 1, 26.7469),
+    (5, 1, 26.4574), (6, 1, 26.0891), (7, 1, 25.4172), (8, 1, 24.1063),
+    (2, 2, 23.1036), (3, 2, 21.3994), (4, 2, 21.5369), (8, 2, 22.1405),
+    (3, 3, 22.2604), (4, 3, 21.3697), (5, 3, 21.5749), (8, 3, 22.2772),
+    (4, 4, 24.8036), (6, 4, 23.1114), (8, 4, 23.2611),
+    (5, 5, 28.5800), (8, 5, 25.0141),
+    (6, 6, 32.8664), (8, 6, 27.7904),
+    (7, 7, 37.3977), (8, 7, 32.3759),
+    (8, 8, 42.0638),
+]
+
+
+@pytest.mark.parametrize("d,m,expected", PAPER_TABLE_ENTRIES)
+def test_paper_n8_table(d, m, expected):
+    got = rm.expected_total_runtime(PAPER_N8, d, d - m, m)
+    assert abs(got - expected) < 2e-4, f"(d={d}, m={m}): {got:.4f} != {expected}"
+
+
+def test_paper_optimal_triple():
+    best, val = rm.optimal_triple(PAPER_N8)
+    assert best == (4, 1, 3)
+    assert abs(val - 21.3697) < 2e-4
+
+
+def test_paper_headline_improvements():
+    """Sec. VI-A: 41% over uncoded, 11% over the best m=1 scheme."""
+    opt = rm.expected_total_runtime(PAPER_N8, 4, 1, 3)
+    uncoded = rm.expected_total_runtime(PAPER_N8, 1, 0, 1)
+    best_m1, v_m1 = rm.optimal_triple(PAPER_N8, restrict_m1=True)
+    assert best_m1 == (8, 7, 1)
+    assert (uncoded - opt) / uncoded > 0.40
+    assert (v_m1 - opt) / v_m1 > 0.10
+
+
+def test_compute_dominant_closed_form():
+    """Integration matches eq. (30) when communication is negligible."""
+    p = rm.RuntimeParams(n=10, lambda1=0.6, lambda2=1e9, t1=1.5, t2=1e-9)
+    for d in (1, 4, 10):
+        closed = rm.compute_dominant_mean(p, d)
+        numeric = rm.expected_total_runtime(p, d, d - 1, 1)
+        assert abs(closed - numeric) < 1e-3 * closed
+
+
+def test_communication_dominant_closed_form():
+    p = rm.RuntimeParams(n=10, lambda1=1e9, lambda2=0.2, t1=1e-12, t2=8.0)
+    for m in (1, 3, 10):
+        closed = rm.communication_dominant_mean(p, m)
+        numeric = rm.expected_total_runtime(p, 10, 10 - m, m)
+        assert abs(closed - numeric) < 1e-3 * closed
+
+
+def test_proposition1_threshold():
+    n = 10
+    thr = sum(1.0 / i for i in range(2, n + 1)) / (n - 1)
+    below = rm.RuntimeParams(n=n, lambda1=1.0, lambda2=1e9, t1=0.9 * thr, t2=0.0)
+    above = rm.RuntimeParams(n=n, lambda1=1.0, lambda2=1e9, t1=1.1 * thr, t2=0.0)
+    assert rm.proposition1_optimal_d(below) == n
+    assert rm.proposition1_optimal_d(above) == 1
+    # cross-check against the closed form: d in {1, n} beats interior d
+    for p, dstar in ((below, n), (above, 1)):
+        vals = {d: rm.compute_dominant_mean(p, d) for d in range(1, n + 1)}
+        assert min(vals, key=vals.get) == dstar
+
+
+def test_proposition2_root():
+    for lam2, t2 in [(0.1, 6.0), (0.5, 2.0), (2.0, 0.3)]:
+        a = rm.proposition2_optimal_alpha(lam2, t2)
+        assert 0.0 < a < 1.0
+        val = a / (1 - a) + math.log1p(-a)
+        assert abs(val - lam2 * t2) < 1e-8
+
+
+def test_monte_carlo_agrees_with_integral():
+    p = PAPER_N8
+    d, s, m = 4, 1, 3
+    draws = rm.simulate_runtimes(p, d, s, m, iters=200_000, seed=0)
+    mc = draws.mean()  # draws already include the d*t1 + t2/m constants
+    exact = rm.expected_total_runtime(p, d, s, m)
+    assert abs(mc - exact) < 0.05  # MC error ~ O(1/sqrt(200k))
+
+
+def test_optimal_dsm_shifts_with_comm_cost():
+    """Sec. VI-A second table: m increases with t2 (n=10, lam1=.6, t1=1.5)."""
+    def opt(lam2, t2):
+        p = rm.RuntimeParams(n=10, lambda1=0.6, lambda2=lam2, t1=1.5, t2=t2)
+        (d, s, m), _ = rm.optimal_triple(p, npts=60_000)
+        return d, s, m
+    assert opt(0.05, 1.5) == (10, 9, 1)
+    assert opt(0.05, 12.0) == (10, 7, 3)
+    assert opt(0.05, 96.0) == (10, 4, 6)
+    assert opt(0.1, 3.0) == (3, 1, 2)
+    assert opt(0.3, 1.5) == (1, 0, 1)

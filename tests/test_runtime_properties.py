@@ -1,0 +1,70 @@
+"""Property tests on the Section-VI runtime model + Theorem-2 machinery that
+complement the exact-value checks in test_runtime_model.py."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import GradCode
+from repro.core.runtime_model import (RuntimeParams, expected_total_runtime,
+                                      hypoexp_cdf, optimal_triple,
+                                      proposition2_optimal_alpha,
+                                      simulate_runtimes)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(0.1, 3.0), st.floats(0.05, 1.0))
+def test_hypoexp_cdf_is_distribution(a, b):
+    t = np.linspace(0, 200, 512)
+    F = hypoexp_cdf(t, a, b)
+    assert F[0] == pytest.approx(0.0, abs=1e-9)
+    assert F[-1] == pytest.approx(1.0, abs=1e-3)
+    assert (np.diff(F) >= -1e-12).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(4, 10), st.floats(0.2, 1.0), st.floats(0.05, 0.3),
+       st.floats(0.2, 2.0), st.floats(1.0, 10.0))
+def test_optimal_triple_on_frontier_and_feasible(n, l1, l2, t1, t2):
+    p = RuntimeParams(n, l1, l2, t1, t2)
+    (d, s, m), v = optimal_triple(p, npts=8_000)
+    assert 1 <= d <= n and m >= 1 and s >= 0
+    assert d == s + m            # paper eq. (5): optimum sits on the frontier
+    assert v > 0
+
+
+def test_monte_carlo_matches_integral():
+    """E[T_{d,s,m}] from simulation agrees with the numeric integral."""
+    p = RuntimeParams(8, 0.8, 0.1, 1.6, 6.0)
+    for (d, s, m) in [(4, 1, 3), (2, 0, 2), (8, 7, 1)]:
+        analytic = expected_total_runtime(p, d, s, m, npts=120_000)
+        # simulate_runtimes returns T_tot draws (constants included)
+        sim = simulate_runtimes(p, d, s, m, iters=60_000, seed=0).mean()
+        assert sim == pytest.approx(analytic, rel=0.02), (d, s, m)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(0.02, 2.0), st.floats(0.5, 40.0))
+def test_proposition2_root_property(lam2, t2):
+    a = proposition2_optimal_alpha(lam2, t2)
+    assert 0 < a < 1
+    val = a / (1 - a) + math.log1p(-a)
+    assert val == pytest.approx(lam2 * t2, rel=1e-4, abs=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(6, 14), st.integers(0, 2**31 - 1))
+def test_gaussian_scheme_condition_number_bounded(n, seed):
+    """Theorem 2 sanity: for the Gaussian V with full responders the
+    reconstruction condition number is finite and the decode is exact."""
+    d, m = 4, 2
+    code = GradCode(n=n, d=min(d, n), s=min(d, n) - m, m=m, kind="random",
+                    seed=seed % 1000)
+    rng = np.random.default_rng(seed % 2**16)
+    G = rng.standard_normal((n, 4 * m))
+    F = code.encode(G)
+    got = code.decode(F, list(range(n)))
+    np.testing.assert_allclose(got, G.sum(0), rtol=1e-6, atol=1e-6)
+    kappa = code.reconstruction_condition_number(list(range(n)))
+    assert np.isfinite(kappa) and kappa >= 1.0
