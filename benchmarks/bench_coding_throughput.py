@@ -1,18 +1,23 @@
-"""Micro-benchmark of the coding layer itself: encode / decode throughput on
-CPU (jit'd jnp reference path — the Pallas kernels target TPU and are
-validated in interpret mode by tests) vs gradient dimension l, plus the
-host-side decode-weight solve time (the master's O(n^3) per-pattern cost the
-paper argues is negligible)."""
+"""Micro-benchmark of the coding layer itself: encode / decode throughput vs
+gradient dimension l for each codec backend (ref einsum vs the Pallas
+kernels — interpret mode off-TPU, so the kernel numbers on CPU measure the
+interpreter, not Mosaic), plus the host-side decode-weight solve time (the
+master's O(n^3) per-pattern cost the paper argues is negligible).
+
+  PYTHONPATH=src python benchmarks/bench_coding_throughput.py --backend both
+  PYTHONPATH=src python benchmarks/bench_coding_throughput.py --backend ref
+"""
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.coding import resolve_backend
 from repro.core import make_code
-from repro.kernels import ref
 
 
 def _time(fn, *args, reps: int = 20) -> float:
@@ -24,25 +29,37 @@ def _time(fn, *args, reps: int = 20) -> float:
     return (time.perf_counter() - t0) / reps * 1e6  # us
 
 
-def run() -> list[str]:
-    out = []
+def _bench_backend(name: str, out: list[str]) -> None:
     code = make_code(16, 4, 1, 3)
-    enc = jax.jit(ref.coded_encode_ref)
-    dec = jax.jit(ref.coded_decode_ref)
+    bk = resolve_backend(name)
+    interp = bool(getattr(bk, "interpret", False))
+    # the Pallas interpreter is orders of magnitude slower than compiled
+    # Mosaic — keep its problem sizes honest-but-small off TPU
+    sizes = (1 << 12, 1 << 14) if interp else (1 << 16, 1 << 20, 1 << 22)
+    reps = 5 if interp else 20
+    enc = jax.jit(lambda G, C: bk.encode(G, C))
+    dec = jax.jit(lambda F, W: bk.decode(F, W))
     rng = np.random.default_rng(0)
-    for l in (1 << 16, 1 << 20, 1 << 22):
+    for l in sizes:
         V = l // code.m
         G = jnp.asarray(rng.standard_normal((code.d, V, code.m)), jnp.float32)
         C = jnp.asarray(code.C[0], jnp.float32)
         F = jnp.asarray(rng.standard_normal((code.n, V)), jnp.float32)
         W = jnp.asarray(code.decode_weights(range(1, 16)), jnp.float32)
-        t_enc = _time(enc, G, C)
-        t_dec = _time(dec, F, W)
+        t_enc = _time(enc, G, C, reps=reps)
+        t_dec = _time(dec, F, W, reps=reps)
         gbps_enc = G.size * 4 / (t_enc / 1e6) / 1e9
         gbps_dec = F.size * 4 / (t_dec / 1e6) / 1e9
-        out.append(f"coding_throughput,l={l},encode_us={t_enc:.0f},"
-                   f"decode_us={t_dec:.0f},enc_GBps={gbps_enc:.1f},"
-                   f"dec_GBps={gbps_dec:.1f}")
+        out.append(f"coding_throughput,backend={bk.name}"
+                   f"{',interpret' if interp else ''},l={l},"
+                   f"encode_us={t_enc:.0f},decode_us={t_dec:.0f},"
+                   f"enc_GBps={gbps_enc:.1f},dec_GBps={gbps_dec:.1f}")
+
+
+def run(backends: tuple[str, ...] = ("ref", "pallas")) -> list[str]:
+    out: list[str] = []
+    for name in backends:
+        _bench_backend(name, out)
     # host-side decode-weight solve (per straggler pattern)
     for n in (16, 32):
         c = make_code(n, 4, 1, 3)
@@ -56,5 +73,10 @@ def run() -> list[str]:
 
 
 if __name__ == "__main__":
-    for line in run():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="both",
+                    choices=["ref", "pallas", "both"])
+    args = ap.parse_args()
+    names = ("ref", "pallas") if args.backend == "both" else (args.backend,)
+    for line in run(names):
         print(line)

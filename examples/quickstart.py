@@ -13,6 +13,7 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import numpy as np  # noqa: E402
 
+from repro.compat import NATIVE_SHARD_MAP  # noqa: E402
 from repro.configs import get_config  # noqa: E402
 from repro.core import make_code  # noqa: E402
 from repro.data import synthetic_lm_stream  # noqa: E402
@@ -29,7 +30,9 @@ def main() -> None:
     #    master (here: every chip, SPMD) tolerates any 1 straggler.
 
     cfg = get_config("qwen3-1.7b").reduced()   # 2-layer, d_model=256 smoke model
-    mesh = make_local_mesh(n_data=4, n_model=2)
+    # old-jax shard_map cannot lower the model's scan-over-layers with a >1
+    # GSPMD-auto model axis; collapse it there so the demo runs everywhere
+    mesh = make_local_mesh(n_data=4, n_model=2 if NATIVE_SHARD_MAP else 1)
     trainer = Trainer(cfg, code, mesh,
                       optimizer=get_optimizer("adamw", 3e-3),
                       schedule="gather",          # paper-faithful decode

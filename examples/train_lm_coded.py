@@ -19,6 +19,9 @@ def main() -> None:
     ap.add_argument("--full-100m", action="store_true")
     ap.add_argument("--schedule", default="gather",
                     choices=["gather", "a2a", "psum"])
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "ref", "pallas", "interpret"],
+                    help="codec compute backend (pallas = the TPU kernels)")
     ap.add_argument("--n-data", type=int, default=4)
     ap.add_argument("--n-model", type=int, default=2)
     ap.add_argument("--d", type=int, default=3)
@@ -33,6 +36,7 @@ def main() -> None:
     os.environ.setdefault("XLA_FLAGS",
                           f"--xla_force_host_platform_device_count={ndev}")
 
+    from repro.compat import NATIVE_SHARD_MAP
     from repro.configs import get_config
     from repro.core import make_code
     from repro.data import synthetic_lm_stream
@@ -51,10 +55,15 @@ def main() -> None:
             base.reduced(), name="coded-lm-demo", n_layers=4, d_model=256,
             vocab=2048)
 
+    if not NATIVE_SHARD_MAP and args.n_model > 1:
+        print(f"note: this jax cannot lower model scans under a >1 model "
+              f"axis inside shard_map; using --n-model 1 (was {args.n_model})")
+        args.n_model = 1
     code = make_code(args.n_data, args.d, args.s, args.m)
     mesh = make_local_mesh(args.n_data, args.n_model)
     trainer = Trainer(cfg, code, mesh, get_optimizer("adamw", 3e-4),
-                      schedule=args.schedule, straggler_mode="random")
+                      schedule=args.schedule, backend=args.backend,
+                      straggler_mode="random")
     import jax
     n_params = sum(x.size for x in jax.tree.leaves(trainer.params))
     print(f"model {cfg.name}: {n_params / 1e6:.1f}M params; {code.describe()}")

@@ -1,0 +1,36 @@
+"""Codec subsystem: the paper's gradient coding as a pluggable pipeline.
+
+  plan     — per-leaf grouping-dimension choice (``plan.py``)
+  encode   — fold subset gradients into l/m encodings (``codec.py``)
+  wire     — wire-dtype collectives with the u16 bitcast trick (``wire.py``)
+  decode   — gather / a2a / psum schedules (``schedules.py``)
+  backends — ref einsum vs Pallas kernels, auto-dispatched (``backends.py``)
+
+Entry point: ``make_codec(code, schedule=..., backend=..., wire_dtype=...)``.
+``repro.core.coded_allreduce`` survives only as a deprecation shim over this
+package.
+"""
+from .backends import (BACKEND_NAMES, CodecBackend, PallasBackend, RefBackend,
+                       resolve_backend)
+from .codec import Codec, decode_tree, encode_leaf, encode_tree, make_codec
+from .inputs import coding_worker_index, make_step_inputs
+from .layout import groups_to_leaf, leaf_to_groups
+from .plan import LeafPlan, coded_fraction, plan_leaf, plan_tree
+from .schedules import (SCHEDULES, AllToAllSchedule, GatherSchedule,
+                        PsumSchedule, Schedule, decode_leaf_a2a,
+                        decode_leaf_gather, get_schedule)
+from .wire import all_gather_wire, all_to_all_wire
+
+__all__ = [
+    "Codec", "make_codec",
+    "CodecBackend", "RefBackend", "PallasBackend", "resolve_backend",
+    "BACKEND_NAMES",
+    "Schedule", "GatherSchedule", "AllToAllSchedule", "PsumSchedule",
+    "SCHEDULES", "get_schedule",
+    "LeafPlan", "plan_leaf", "plan_tree", "coded_fraction",
+    "encode_leaf", "encode_tree", "decode_tree",
+    "decode_leaf_gather", "decode_leaf_a2a",
+    "all_gather_wire", "all_to_all_wire",
+    "leaf_to_groups", "groups_to_leaf",
+    "make_step_inputs", "coding_worker_index",
+]

@@ -1,0 +1,98 @@
+"""Compute backends for the codec: the same encode/decode contractions in
+interchangeable implementations.
+
+Canonical shapes (the leaf <-> canonical reshaping lives in ``codec.py``):
+
+  encode: G (d, V, m[, R]) x C (d, m)  ->  (V[, R])      (paper eq. 17/18)
+  decode: F (n, V[, R])   x W (n, m)   ->  (V, m[, R])   (paper eq. 19-21)
+
+Backends:
+  ``ref``    — pure jnp einsum/tensordot; runs anywhere, XLA-fused.
+  ``pallas`` — the TPU Mosaic kernels in ``repro.kernels``; on non-TPU hosts
+               the same kernels execute in Pallas interpret mode (bit-exact
+               semantics, slow — meant for tests and small problems).
+
+``resolve_backend`` implements the dispatch policy: ``auto`` -> pallas on TPU,
+ref elsewhere; explicit names force a backend.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+# imported as modules (not the package's re-exported functions) so tests can
+# monkeypatch the kernel entry points and observe the pallas path executing
+import importlib
+
+_encode_mod = importlib.import_module("repro.kernels.coded_encode")
+_decode_mod = importlib.import_module("repro.kernels.coded_decode")
+
+BACKEND_NAMES = ("auto", "ref", "pallas", "interpret")
+
+
+@dataclasses.dataclass(frozen=True)
+class CodecBackend:
+    """Interface: subclasses implement the two canonical contractions."""
+    name: str = "abstract"
+
+    def encode(self, G: jax.Array, C: jax.Array, *, out_dtype=None) -> jax.Array:
+        raise NotImplementedError
+
+    def decode(self, F: jax.Array, W: jax.Array, *, out_dtype=None) -> jax.Array:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class RefBackend(CodecBackend):
+    name: str = "ref"
+
+    def encode(self, G, C, *, out_dtype=None):
+        out_dtype = out_dtype or G.dtype
+        sub = "jvur,ju->vr" if G.ndim == 4 else "jvu,ju->v"
+        return jnp.einsum(sub, G.astype(jnp.float32),
+                          C.astype(jnp.float32)).astype(out_dtype)
+
+    def decode(self, F, W, *, out_dtype=None):
+        out_dtype = out_dtype or F.dtype
+        sub = "nvr,nu->vur" if F.ndim == 3 else "nv,nu->vu"
+        return jnp.einsum(sub, F.astype(jnp.float32),
+                          W.astype(jnp.float32)).astype(out_dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class PallasBackend(CodecBackend):
+    name: str = "pallas"
+    interpret: bool = False
+
+    def encode(self, G, C, *, out_dtype=None):
+        return _encode_mod.coded_encode(G, C, interpret=self.interpret,
+                                        out_dtype=out_dtype)
+
+    def decode(self, F, W, *, out_dtype=None):
+        return _decode_mod.coded_decode(F, W, interpret=self.interpret,
+                                        out_dtype=out_dtype)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def resolve_backend(backend: str | CodecBackend | None) -> CodecBackend:
+    """Dispatch policy.  ``auto``: pallas on TPU, ref elsewhere.  ``pallas``:
+    the kernels, in interpret mode when no TPU is attached.  ``interpret``:
+    force interpret mode even on TPU (kernel debugging)."""
+    if isinstance(backend, CodecBackend):
+        return backend
+    name = backend or "auto"
+    if name == "auto":
+        return PallasBackend() if _on_tpu() else RefBackend()
+    if name == "ref":
+        return RefBackend()
+    if name == "pallas":
+        return PallasBackend(interpret=not _on_tpu())
+    if name == "interpret":
+        return PallasBackend(interpret=True)
+    raise ValueError(f"unknown codec backend {backend!r}; "
+                     f"expected one of {BACKEND_NAMES}")

@@ -1,0 +1,137 @@
+"""The ``Codec``: one object owning the per-leaf coded-aggregation lifecycle.
+
+A codec binds a gradient code to an aggregation ``Schedule`` and a compute
+``CodecBackend`` and exposes the four phases the train step needs:
+
+  plan    — choose each leaf's grouping dimension (``plan_tree``),
+  encode  — fold one subset's gradient into the l/m encoding (eq. 17/18),
+  wire    — mask stragglers + cast to the wire dtype (u16-bitcast collectives),
+  decode  — run the schedule's collective choreography + contraction (eq. 19-21).
+
+New code families (approximate codes, heterogeneous placements) plug in by
+constructing a codec around their ``GradCode``; the train step never changes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING, Any
+
+import jax
+import jax.numpy as jnp
+
+if TYPE_CHECKING:  # annotation-only: keeps repro.coding import-independent
+    from repro.core.schemes import GradCode
+
+from .backends import CodecBackend, RefBackend, resolve_backend
+from .layout import flatten_rest, leaf_to_groups, unflatten_rest
+from .plan import LeafPlan, coded_fraction, plan_tree
+from .schedules import Schedule, get_schedule
+
+PyTree = Any
+_REF = RefBackend()
+
+
+# --------------------------------------------------- functional encode layer
+def encode_leaf(g: jax.Array, coef: jax.Array, plan: LeafPlan,
+                backend: CodecBackend = _REF) -> jax.Array:
+    """Fold one subset's gradient leaf into the l/m-sized encoding.
+
+    g: (..., Dg, ...);  coef: (m,)  ->  (Dg/m, *rest) contribution.
+    The fold is the d=1 slice of the canonical (d, V, m[, R]) contraction, so
+    both backends serve it.
+    """
+    assert plan.coded
+    m = coef.shape[0]
+    x = leaf_to_groups(g, plan, m)                  # (V, m, *rest)
+    rest = x.shape[2:]
+    G = flatten_rest(x, 2)[None]                    # (1, V, m[, R])
+    out = backend.encode(G, coef.reshape(1, m), out_dtype=g.dtype)
+    return unflatten_rest(out, 1, rest)             # (V, *rest)
+
+
+def encode_tree(grads: PyTree, coef: jax.Array, plans: PyTree,
+                backend: CodecBackend = _REF) -> tuple[PyTree, PyTree]:
+    """Split one subset-gradient tree into (coded contributions, psum leaves).
+
+    coef: (m,) — the C[i, j, :] row for this worker/subset.
+    Returns (encoded_tree_or_None_per_leaf, smalls_tree_or_None_per_leaf).
+    """
+    enc = jax.tree.map(
+        lambda g, p: encode_leaf(g, coef, p, backend) if p.coded else None,
+        grads, plans)
+    small = jax.tree.map(
+        lambda g, p: None if p.coded else g, grads, plans)
+    return enc, small
+
+
+def decode_tree(enc: PyTree, smalls: PyTree, W: jax.Array, rho_i: jax.Array,
+                plans: PyTree, axis_names, n: int, schedule: str = "gather",
+                backend: CodecBackend = _REF) -> PyTree:
+    """Aggregate: decode coded leaves, rho-weighted psum for small leaves.
+
+    enc   : pytree with (Dg/m, *rest) arrays at coded leaves, None elsewhere
+    smalls: pytree with summed rho-weighted small-leaf grads, None elsewhere
+    W     : (n, m); rho_i applied upstream (see coded_step).
+    """
+    sched = get_schedule(schedule)
+
+    def dec_one(e, sm, p):
+        if p.coded:
+            return sched.decode_leaf(e, W, p, axis_names, n, backend)
+        return jax.lax.psum(sm, axis_names)
+
+    return jax.tree.map(dec_one, enc, smalls, plans,
+                        is_leaf=lambda x: x is None)
+
+
+# -------------------------------------------------------------- the subsystem
+@dataclasses.dataclass(frozen=True)
+class Codec:
+    """Gradient code + schedule + backend, with the leaf lifecycle methods."""
+    code: GradCode
+    schedule: Schedule
+    backend: CodecBackend
+    wire_dtype: Any = jnp.float32
+
+    # ---- planning
+    def plan(self, tree: PyTree, specs: PyTree | None = None) -> PyTree:
+        return plan_tree(tree, specs, self.code.m,
+                         self.schedule.n_split(self.code.n))
+
+    def coded_fraction(self, tree: PyTree, plans: PyTree) -> float:
+        return coded_fraction(tree, plans)
+
+    # ---- encode
+    def encode_leaf(self, g: jax.Array, coef: jax.Array,
+                    plan: LeafPlan) -> jax.Array:
+        return encode_leaf(g, coef, plan, self.backend)
+
+    def encoding_zero(self, p, plan: LeafPlan) -> jax.Array:
+        """f32 zero accumulator in the encoding layout of leaf ``p``."""
+        if not plan.coded:
+            return jnp.zeros(p.shape, jnp.float32)
+        x = jnp.moveaxis(jnp.zeros(p.shape, jnp.float32), plan.group_dim, 0)
+        return jnp.zeros((x.shape[0] // self.code.m, *x.shape[1:]), jnp.float32)
+
+    # ---- wire
+    def to_wire(self, e: jax.Array, mask_i: jax.Array) -> jax.Array:
+        """Mask the straggler payload (transmits nothing) + cast to the wire."""
+        return (e * mask_i).astype(jnp.dtype(self.wire_dtype))
+
+    # ---- decode
+    def decode_leaf(self, f_leaf: jax.Array, W: jax.Array, plan: LeafPlan,
+                    axis_names, *, W_row: jax.Array | None = None,
+                    emulate: bool = False) -> jax.Array:
+        return self.schedule.decode_leaf(f_leaf, W, plan, axis_names,
+                                         self.code.n, self.backend,
+                                         W_row=W_row, emulate=emulate)
+
+
+def make_codec(code: GradCode, *, schedule: str | Schedule = "gather",
+               backend: str | CodecBackend = "auto",
+               wire_dtype="float32") -> Codec:
+    """Resolve names to objects; ``backend='auto'`` -> pallas on TPU, ref
+    elsewhere (see ``backends.resolve_backend``)."""
+    return Codec(code=code, schedule=get_schedule(schedule),
+                 backend=resolve_backend(backend),
+                 wire_dtype=jnp.dtype(wire_dtype))

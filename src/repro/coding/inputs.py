@@ -1,0 +1,53 @@
+"""Host-side per-step inputs and worker indexing for the coded aggregation."""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Sequence
+
+import jax
+import numpy as np
+
+if TYPE_CHECKING:  # annotation-only: keeps repro.coding import-independent
+    from repro.core.schemes import GradCode
+
+
+def make_step_inputs(code: GradCode, stragglers: Sequence[int] | np.ndarray = (),
+                     dtype=np.float32) -> dict[str, np.ndarray]:
+    """Host-side (float64 solve) per-straggler-pattern inputs to the jitted step.
+
+    Returns:
+      mask : (n,)   1.0 at responders, 0.0 at stragglers
+      W    : (n, m) decode weights, zero rows at stragglers
+      rho  : (n, d) small-leaf weights: each subset counted once across its
+             responding holders (equal split).
+    """
+    n, d = code.n, code.d
+    st = np.zeros(n, dtype=bool)
+    st[np.asarray(list(stragglers), dtype=int)] = True
+    if st.sum() > code.s:
+        raise ValueError(f"more stragglers ({st.sum()}) than design s={code.s}")
+    resp = np.nonzero(~st)[0]
+    W = code.decode_weights(resp).astype(dtype)
+    # rho: for subset j, responding holders split weight equally
+    rho = np.zeros((n, d), dtype=dtype)
+    placement = code.placement()  # (n, d) subset ids
+    holders: dict[int, list[int]] = {}
+    for i in range(n):
+        for slot, j in enumerate(placement[i]):
+            holders.setdefault(int(j), []).append((i, slot))
+    for j, lst in holders.items():
+        live = [(i, slot) for (i, slot) in lst if not st[i]]
+        if not live:
+            raise ValueError(f"subset {j} has no responding holder")
+        for (i, slot) in live:
+            rho[i, slot] = 1.0 / len(live)
+    return {"mask": (~st).astype(dtype), "W": W, "rho": rho}
+
+
+def coding_worker_index(axis_names: str | tuple[str, ...]) -> jax.Array:
+    """Flattened worker index over the (possibly multiple) data axes."""
+    if isinstance(axis_names, str):
+        return jax.lax.axis_index(axis_names)
+    idx = jax.lax.axis_index(axis_names[0])
+    for ax in axis_names[1:]:
+        idx = idx * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+    return idx

@@ -1,0 +1,46 @@
+"""Leaf-layout <-> canonical-shape conversions.
+
+The backends contract canonical tensors (``(d, V, m[, R])`` encode,
+``(n, V[, R])`` decode); parameter leaves are arbitrary-rank with a planned
+grouping dimension.  These helpers move the grouping dim first, split it into
+(V, m) groups, and flatten any trailing (possibly model-sharded) dims into the
+single R axis the kernels tile over — all reshape/transpose only, fused away
+by XLA.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .plan import LeafPlan
+
+
+def leaf_to_groups(g: jax.Array, plan: LeafPlan, m: int) -> jax.Array:
+    """(..., Dg, ...) -> (V, m, *rest) with the grouping dim split first."""
+    x = jnp.moveaxis(g, plan.group_dim, 0)
+    Dg = x.shape[0]
+    return x.reshape(Dg // m, m, *x.shape[1:])
+
+
+def groups_to_leaf(decoded: jax.Array, plan: LeafPlan) -> jax.Array:
+    """(V, m, *rest) -> original leaf layout (inverse of ``leaf_to_groups``)."""
+    V, m = decoded.shape[:2]
+    x = decoded.reshape(V * m, *decoded.shape[2:])
+    return jnp.moveaxis(x, 0, plan.group_dim)
+
+
+def flatten_rest(x: jax.Array, lead: int) -> jax.Array:
+    """Collapse all dims after the first ``lead`` into one trailing R axis
+    (no-op when there are none)."""
+    rest = x.shape[lead:]
+    if not rest:
+        return x
+    return x.reshape(*x.shape[:lead], int(np.prod(rest)))
+
+
+def unflatten_rest(x: jax.Array, lead: int, rest: tuple[int, ...]) -> jax.Array:
+    """Inverse of ``flatten_rest``."""
+    if not rest:
+        return x
+    return x.reshape(*x.shape[:lead], *rest)

@@ -1,0 +1,69 @@
+"""Per-leaf participation planning for the coded aggregation.
+
+The paper groups the flat gradient's coordinates as (v*m + u).  Flattening
+model-sharded tensors would trigger resharding, so we pick, per parameter
+leaf, a *grouping dimension* that is replicated over the model axes and
+divisible by m (and by n for the all-to-all schedule).  Leaves with no usable
+dimension (norm gains, biases — a negligible byte fraction) are aggregated by
+a straggler-aware weighted psum instead.  See DESIGN.md §3.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafPlan:
+    """How one parameter leaf participates in the coded aggregation."""
+    coded: bool          # False -> weighted-psum fallback
+    group_dim: int = -1  # dimension whose coordinates are grouped by m
+
+
+def plan_leaf(shape: Sequence[int], spec: Sequence[Any] | None, m: int,
+              n_split: int = 1) -> LeafPlan:
+    """Choose a grouping dimension: model-replicated (spec entry None) and
+    divisible by m * n_split.  Prefers the largest usable dimension."""
+    best, best_size = -1, 0
+    for dim, size in enumerate(shape):
+        entry = None if spec is None or dim >= len(spec) else spec[dim]
+        if entry is not None:
+            continue  # sharded over a model/pod axis — do not regroup
+        if size % (m * n_split) != 0 or size == 0:
+            continue
+        if size > best_size:
+            best, best_size = dim, size
+    if best < 0:
+        return LeafPlan(coded=False)
+    return LeafPlan(coded=True, group_dim=best)
+
+
+def plan_tree(tree: PyTree, specs: PyTree | None, m: int, n_split: int = 1) -> PyTree:
+    """Map ``plan_leaf`` over a pytree of arrays/ShapeDtypeStructs (+ optional
+    PartitionSpecs, a tree with the same structure whose leaves are specs)."""
+    if specs is None:
+        return jax.tree.map(lambda x: plan_leaf(tuple(x.shape), None, m, n_split),
+                            tree)
+    flat, treedef = jax.tree.flatten(tree)
+    flat_sp = treedef.flatten_up_to(specs)
+    plans = [plan_leaf(tuple(x.shape),
+                       tuple(sp) if sp is not None else None, m, n_split)
+             for x, sp in zip(flat, flat_sp)]
+    return treedef.unflatten(plans)
+
+
+def coded_fraction(tree: PyTree, plans: PyTree) -> float:
+    """Fraction of gradient bytes covered by the code (rest falls back to psum)."""
+    tot = cod = 0
+    for x, p in zip(jax.tree.leaves(tree), jax.tree.leaves(
+            plans, is_leaf=lambda v: isinstance(v, LeafPlan))):
+        size = int(np.prod(x.shape))
+        tot += size
+        if p.coded:
+            cod += size
+    return cod / max(tot, 1)

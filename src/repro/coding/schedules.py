@@ -1,0 +1,149 @@
+"""Aggregation schedules over the data axes, as first-class objects.
+
+- ``gather``  (paper-faithful): all_gather the l/m encodings, decode locally.
+- ``a2a``     (beyond-paper):  all_to_all chunks of the encodings, decode the
+              local 1/n slice, all_gather decoded slices.  ≈ l(1/m + 1) bytes
+              received per worker vs ≈ 2l for plain all-reduce.
+- ``psum``    (baseline / fallback): straggler-aware weighted all-reduce —
+              carries no encoding, so its decode path is the train step's
+              plain rho-weighted psum.
+
+Each schedule's decode contraction is delegated to a ``CodecBackend`` so the
+same collective choreography runs on the einsum reference or the Pallas
+kernels.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import wire
+from .backends import CodecBackend, RefBackend
+from .layout import flatten_rest, groups_to_leaf, unflatten_rest
+from .plan import LeafPlan
+
+_REF = RefBackend()
+
+
+def _decode_stack(stacked: jax.Array, W: jax.Array,
+                  backend: CodecBackend) -> jax.Array:
+    """(n, V, *rest) x (n, m) -> (V, m, *rest), accumulated/returned in f32."""
+    rest = stacked.shape[2:]
+    F = flatten_rest(stacked, 2)
+    dec = backend.decode(F, W, out_dtype=jnp.float32)   # (V, m[, R])
+    return unflatten_rest(dec, 2, rest)
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """Interface: how encoded leaves travel and get decoded."""
+    name: str = "abstract"
+    uses_encoding: bool = True
+
+    def n_split(self, n: int) -> int:
+        """Extra divisibility the planner must guarantee on the grouping dim
+        (beyond m): 1 unless the schedule slices encodings n ways."""
+        return 1
+
+    def decode_leaf(self, f_leaf: jax.Array, W: jax.Array, plan: LeafPlan,
+                    axis_names, n: int, backend: CodecBackend, *,
+                    W_row: jax.Array | None = None,
+                    emulate: bool = False) -> jax.Array:
+        """Decode one leaf.  ``W_row`` is this worker's (m,) decode-weight row
+        (required for ``emulate``); ``emulate=True`` selects the psum-based
+        fallback for runtimes whose shard_map partial-auto mode cannot lower
+        all_gather/all_to_all (see ``repro.compat.collectives_ok``)."""
+        raise NotImplementedError
+
+
+def _decode_psum_emulated(f_leaf, W_row, plan, axis_names, backend):
+    """Collective-free decode: every worker weights its own encoding by its W
+    row (an n=1 backend contraction — straggler rows are zero, contributing
+    nothing) and the sum over workers is one all-reduce.  Identical math to
+    gather-then-contract; trades the all-gather for an m-times-larger psum."""
+    assert W_row is not None, "emulated decode needs this worker's W row"
+    dec = _decode_stack(f_leaf[None], W_row[None], backend)  # (V, m, *rest)
+    return groups_to_leaf(jax.lax.psum(dec, axis_names), plan)
+
+
+@dataclasses.dataclass(frozen=True)
+class GatherSchedule(Schedule):
+    """Paper-faithful master emulation: all_gather encodings, decode locally."""
+    name: str = "gather"
+
+    def decode_leaf(self, f_leaf, W, plan, axis_names, n, backend, *,
+                    W_row=None, emulate=False):
+        if emulate:
+            return _decode_psum_emulated(f_leaf, W_row, plan, axis_names,
+                                         backend)
+        gathered = wire.all_gather_wire(f_leaf, axis_names)  # (n, V, *rest)
+        return groups_to_leaf(_decode_stack(gathered, W, backend), plan)
+
+
+@dataclasses.dataclass(frozen=True)
+class AllToAllSchedule(Schedule):
+    """Beyond-paper TPU-native: all_to_all encoding chunks, decode the local
+    1/n slice of the sum, all_gather decoded slices (second hop travels at the
+    wire dtype too)."""
+    name: str = "a2a"
+
+    def n_split(self, n: int) -> int:
+        return n
+
+    def decode_leaf(self, f_leaf, W, plan, axis_names, n, backend, *,
+                    W_row=None, emulate=False):
+        if emulate:
+            # the a2a choreography needs a native all_to_all; the fallback
+            # degrades to the gather-equivalent psum (same decoded values)
+            return _decode_psum_emulated(f_leaf, W_row, plan, axis_names,
+                                         backend)
+        v = f_leaf.shape[0]
+        assert v % n == 0, f"a2a needs n | Dg/m, got {v} % {n}"
+        # split my encoding into n chunks along v, exchange: row p = peer p's
+        ex = wire.all_to_all_wire(f_leaf, axis_names)            # (v, *rest)
+        ex = ex.reshape(n, v // n, *f_leaf.shape[1:])            # (n, c, *rest)
+        dec = _decode_stack(ex, W, backend)                      # (c, m, *rest)
+        full = wire.all_gather_wire(dec.astype(f_leaf.dtype), axis_names)
+        full = full.astype(jnp.float32)                          # (n, c, m, *rest)
+        full = full.reshape(v, *dec.shape[1:])                   # (v, m, *rest)
+        return groups_to_leaf(full, plan)
+
+
+@dataclasses.dataclass(frozen=True)
+class PsumSchedule(Schedule):
+    """Uncoded baseline: rho-weighted all-reduce, no encode/decode."""
+    name: str = "psum"
+    uses_encoding: bool = False
+
+    def decode_leaf(self, f_leaf, W, plan, axis_names, n, backend, *,
+                    W_row=None, emulate=False):
+        return jax.lax.psum(f_leaf, axis_names)
+
+
+SCHEDULES = {s.name: s for s in
+             (GatherSchedule(), AllToAllSchedule(), PsumSchedule())}
+
+
+def get_schedule(schedule: str | Schedule) -> Schedule:
+    if isinstance(schedule, Schedule):
+        return schedule
+    try:
+        return SCHEDULES[schedule]
+    except KeyError:
+        raise ValueError(f"unknown schedule {schedule!r}; "
+                         f"expected one of {tuple(SCHEDULES)}") from None
+
+
+# ------------------------------------------- back-compat functional wrappers
+def decode_leaf_gather(f_leaf, W, plan, axis_names,
+                       backend: CodecBackend = _REF):
+    return SCHEDULES["gather"].decode_leaf(f_leaf, W, plan, axis_names,
+                                           n=-1, backend=backend)
+
+
+def decode_leaf_a2a(f_leaf, W, plan, axis_names, n,
+                    backend: CodecBackend = _REF):
+    return SCHEDULES["a2a"].decode_leaf(f_leaf, W, plan, axis_names,
+                                        n=n, backend=backend)

@@ -1,0 +1,76 @@
+"""Version compatibility layer for the JAX APIs this repo leans on.
+
+The codebase is written against the modern sharding surface (``jax.shard_map``,
+``jax.sharding.set_mesh``, ``jax.sharding.AxisType``, ``jax.make_mesh`` with
+``axis_types``).  Older jaxlibs (<= 0.4.x, e.g. this container's 0.4.37) expose
+the same machinery under ``jax.experimental.shard_map`` / the ``Mesh`` context
+manager.  Every call site goes through this module so the version split lives
+in exactly one place.
+"""
+from __future__ import annotations
+
+import contextlib
+import enum
+from typing import Any, Iterable
+
+import jax
+
+__all__ = ["shard_map", "set_mesh", "make_mesh", "AXIS_TYPE_AUTO",
+           "NATIVE_SHARD_MAP", "collectives_ok"]
+
+# Modern jax exposes shard_map at top level; its partial-auto mode supports
+# collectives/scan inside the manual region.  The 0.4.x experimental
+# shard_map's partial-auto mode hard-aborts XLA (CHECK IsManualSubgroup) on
+# all_gather / all_to_all / scan / axis_index when a >1-sized auto axis
+# remains — callers use ``collectives_ok`` to pick a psum-only fallback.
+NATIVE_SHARD_MAP = hasattr(jax, "shard_map")
+
+
+def collectives_ok(mesh, manual_axes: Iterable[str]) -> bool:
+    """True when native collectives (and scan) may be used inside a shard_map
+    manual region over ``manual_axes`` of ``mesh``."""
+    if NATIVE_SHARD_MAP:
+        return True
+    auto = set(mesh.axis_names) - set(manual_axes)
+    return all(int(mesh.shape[a]) == 1 for a in auto)
+
+
+class _AxisType(enum.Enum):
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+AXIS_TYPE_AUTO = getattr(getattr(jax.sharding, "AxisType", _AxisType), "Auto")
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names: Iterable[str],
+              check_vma: bool = False):
+    """``jax.shard_map`` with manual ``axis_names``; other axes stay GSPMD-auto."""
+    axis_names = frozenset(axis_names)
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, axis_names=axis_names,
+                             check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    auto = frozenset(mesh.axis_names) - axis_names
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma, auto=auto)
+
+
+def set_mesh(mesh) -> Any:
+    """Context manager installing ``mesh`` as the ambient mesh."""
+    if hasattr(jax.sharding, "set_mesh"):
+        return jax.sharding.set_mesh(mesh)
+    if hasattr(mesh, "__enter__"):  # Mesh is a context manager on old jax
+        return mesh
+    return contextlib.nullcontext(mesh)
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None):
+    """``jax.make_mesh`` tolerating jaxlibs without the ``axis_types`` kwarg."""
+    try:
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names),
+                             axis_types=axis_types)
+    except TypeError:
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))

@@ -5,7 +5,9 @@ Public API:
   tradeoff                          — Theorem 1 feasibility helpers
   runtime_model                     — Section VI shifted-exponential model
   stability                         — Theorem 2 / condition-number machinery
-  coded_allreduce                   — JAX SPMD coded aggregation layer
+  coded_allreduce                   — DEPRECATED shim over ``repro.coding``
+                                      (the codec subsystem: plan / encode /
+                                      wire / decode with ref+pallas backends)
 """
 from . import coded_allreduce, cyclic, polynomial, random_code, runtime_model, stability, tradeoff
 from .schemes import GradCode, make_code, uncoded

@@ -1,240 +1,40 @@
-"""Coded gradient aggregation as a drop-in replacement for the data-parallel
-psum — the paper's technique embedded in a JAX SPMD program.
+"""DEPRECATED compatibility shim — the coded-aggregation layer moved to the
+``repro.coding`` package (plan/encode/wire/decode split across focused
+modules, with pluggable ref/Pallas backends and schedule objects).
 
-Layout strategy (see DESIGN.md §3): the paper groups the flat gradient's
-coordinates as (v*m + u).  Flattening model-sharded tensors would trigger
-resharding, so we pick, per parameter leaf, a *grouping dimension* that is
-replicated over the model axes and divisible by m (and by n for the all-to-all
-schedule).  Leaves with no usable dimension (norm gains, biases — a negligible
-byte fraction) are aggregated by a straggler-aware weighted psum instead.
-
-Three aggregation schedules over the data axes:
-
-- ``gather``  (paper-faithful): all_gather the l/m encodings, decode locally.
-- ``a2a``     (beyond-paper):  all_to_all chunks of the encodings, decode the
-              local 1/n slice, all_gather decoded slices.  ≈ l(1/m + 1) bytes
-              received per worker vs ≈ 2l for plain all-reduce.
-- ``psum``    (baseline / fallback): straggler-aware weighted all-reduce
-              (rho-weighted so each subset counts exactly once).
+This module re-exports the old functional surface so existing imports keep
+working; new code should ``import repro.coding`` (or ``make_codec``) directly.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Sequence
+from typing import Any
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from .schemes import GradCode
+from repro.coding import (  # noqa: F401  (re-exports)
+    LeafPlan,
+    coded_fraction,
+    coding_worker_index,
+    decode_leaf_a2a,
+    decode_leaf_gather,
+    decode_tree,
+    encode_leaf,
+    encode_tree,
+    make_step_inputs,
+    plan_leaf,
+    plan_tree,
+)
+from repro.coding.layout import groups_to_leaf
+from repro.coding.wire import all_gather_wire as _gather_wire  # noqa: F401
 
 PyTree = Any
 
 
-# ------------------------------------------------------------------ planning
-@dataclasses.dataclass(frozen=True)
-class LeafPlan:
-    """How one parameter leaf participates in the coded aggregation."""
-    coded: bool          # False -> weighted-psum fallback
-    group_dim: int = -1  # dimension whose coordinates are grouped by m
+def _regroup(decoded_vu, plan, orig_ndim=None):
+    """Old private helper, old 3-arg signature (orig_ndim was always unused)."""
+    return groups_to_leaf(decoded_vu, plan)
 
-
-def plan_leaf(shape: Sequence[int], spec: Sequence[Any] | None, m: int,
-              n_split: int = 1) -> LeafPlan:
-    """Choose a grouping dimension: model-replicated (spec entry None) and
-    divisible by m * n_split.  Prefers the largest usable dimension."""
-    if m == 1 and n_split == 1:
-        # still 'coded' (coefficients apply), group dim only needs divisibility
-        pass
-    best, best_size = -1, 0
-    for dim, size in enumerate(shape):
-        entry = None if spec is None or dim >= len(spec) else spec[dim]
-        if entry is not None:
-            continue  # sharded over a model/pod axis — do not regroup
-        if size % (m * n_split) != 0 or size == 0:
-            continue
-        if size > best_size:
-            best, best_size = dim, size
-    if best < 0:
-        return LeafPlan(coded=False)
-    return LeafPlan(coded=True, group_dim=best)
-
-
-def plan_tree(tree: PyTree, specs: PyTree | None, m: int, n_split: int = 1) -> PyTree:
-    """Map ``plan_leaf`` over a pytree of arrays/ShapeDtypeStructs (+ optional
-    PartitionSpecs, a tree with the same structure whose leaves are specs)."""
-    if specs is None:
-        return jax.tree.map(lambda x: plan_leaf(tuple(x.shape), None, m, n_split),
-                            tree)
-    flat, treedef = jax.tree.flatten(tree)
-    flat_sp = treedef.flatten_up_to(specs)
-    plans = [plan_leaf(tuple(x.shape),
-                       tuple(sp) if sp is not None else None, m, n_split)
-             for x, sp in zip(flat, flat_sp)]
-    return treedef.unflatten(plans)
-
-
-def coded_fraction(tree: PyTree, plans: PyTree) -> float:
-    """Fraction of gradient bytes covered by the code (rest falls back to psum)."""
-    tot = cod = 0
-    for x, p in zip(jax.tree.leaves(tree), jax.tree.leaves(
-            plans, is_leaf=lambda v: isinstance(v, LeafPlan))):
-        size = int(np.prod(x.shape))
-        tot += size
-        if p.coded:
-            cod += size
-    return cod / max(tot, 1)
-
-
-# ------------------------------------------------------------------- encode
-def encode_leaf(g: jax.Array, coef: jax.Array, plan: LeafPlan) -> jax.Array:
-    """Fold one subset's gradient leaf into the l/m-sized encoding.
-
-    g: (..., Dg, ...);  coef: (m,)  ->  (..., Dg/m, ...) contribution.
-    """
-    assert plan.coded
-    m = coef.shape[0]
-    x = jnp.moveaxis(g, plan.group_dim, 0)
-    Dg = x.shape[0]
-    x = x.reshape(Dg // m, m, *x.shape[1:])
-    return jnp.tensordot(coef, x, axes=[[0], [1]])  # (Dg/m, *rest)
-
-
-def encode_tree(grads: PyTree, coef: jax.Array, plans: PyTree) -> tuple[PyTree, PyTree]:
-    """Split one subset-gradient tree into (coded contributions, psum leaves).
-
-    coef: (m,) — the C[i, j, :] row for this worker/subset.
-    Returns (encoded_tree_or_None_per_leaf, smalls_tree_or_None_per_leaf).
-    """
-    is_plan = lambda x: isinstance(x, LeafPlan)
-    enc = jax.tree.map(
-        lambda g, p: encode_leaf(g, coef, p) if p.coded else None,
-        grads, plans, is_leaf=None)
-    small = jax.tree.map(
-        lambda g, p: None if p.coded else g, grads, plans)
-    del is_plan
-    return enc, small
-
-
-# ------------------------------------------------------------------- decode
-def _regroup(decoded_vu: jax.Array, plan: LeafPlan, orig_ndim: int) -> jax.Array:
-    """(Dg/m, m, *rest) -> original leaf layout."""
-    Dgm, m = decoded_vu.shape[:2]
-    x = decoded_vu.reshape(Dgm * m, *decoded_vu.shape[2:])
-    return jnp.moveaxis(x, 0, plan.group_dim)
-
-
-def _gather_wire(x: jax.Array, axis_names) -> jax.Array:
-    """all_gather at the wire dtype.  Sub-f32 payloads are bitcast to u16 for
-    the collective: XLA's simplifier otherwise hoists the later upcast above
-    the all-gather (silently doubling wire bytes); integers block the hoist.
-    """
-    if x.dtype == jnp.float32:
-        return jax.lax.all_gather(x, axis_names)
-    raw = jax.lax.bitcast_convert_type(x, jnp.uint16)
-    g = jax.lax.all_gather(raw, axis_names)
-    return jax.lax.bitcast_convert_type(g, x.dtype)
-
-
-def decode_leaf_gather(f_leaf: jax.Array, W: jax.Array, plan: LeafPlan,
-                       axis_names: str | tuple[str, ...]) -> jax.Array:
-    """Paper-faithful schedule: all_gather encodings then decode locally.
-
-    f_leaf: (Dg/m, *rest) local encoding;  W: (n, m) decode weights.
-    """
-    gathered = _gather_wire(f_leaf, axis_names)        # (n, Dg/m, *rest)
-    dec = jnp.einsum("nv...,nu->vu...", gathered.astype(jnp.float32),
-                     W.astype(jnp.float32))
-    return _regroup(dec, plan, f_leaf.ndim)
-
-
-def decode_leaf_a2a(f_leaf: jax.Array, W: jax.Array, plan: LeafPlan,
-                    axis_names: str | tuple[str, ...], n: int) -> jax.Array:
-    """Beyond-paper schedule: all_to_all the encoding chunks, decode the local
-    1/n slice of the sum, all_gather decoded slices."""
-    v = f_leaf.shape[0]
-    assert v % n == 0, f"a2a needs n | Dg/m, got {v} % {n}"
-    # split my encoding into n chunks along v, exchange: row p = peer p's chunk
-    if f_leaf.dtype == jnp.float32:
-        ex = jax.lax.all_to_all(f_leaf, axis_names, split_axis=0,
-                                concat_axis=0, tiled=True)    # (v, *rest)
-    else:  # sub-f32 wire: bitcast so XLA cannot hoist the upcast (see above)
-        raw = jax.lax.bitcast_convert_type(f_leaf, jnp.uint16)
-        ex = jax.lax.bitcast_convert_type(
-            jax.lax.all_to_all(raw, axis_names, split_axis=0,
-                               concat_axis=0, tiled=True), f_leaf.dtype)
-    ex = ex.reshape(n, v // n, *f_leaf.shape[1:])             # (n, c, *rest)
-    dec = jnp.einsum("nc...,nu->cu...", ex.astype(jnp.float32),
-                     W.astype(jnp.float32))                   # (c, m, *rest)
-    # second hop travels at the wire dtype too
-    full = _gather_wire(dec.astype(f_leaf.dtype), axis_names)
-    full = full.astype(jnp.float32)                           # (n, c, m, *rest)
-    full = full.reshape(v, *dec.shape[1:])                    # (Dg/m, m, *rest)
-    return _regroup(full, plan, f_leaf.ndim)
-
-
-def decode_tree(enc: PyTree, smalls: PyTree, W: jax.Array, rho_i: jax.Array,
-                plans: PyTree, axis_names, n: int, schedule: str = "gather") -> PyTree:
-    """Aggregate: decode coded leaves, rho-weighted psum for small leaves.
-
-    enc   : pytree with (Dg/m, *rest) arrays at coded leaves, None elsewhere
-    smalls: pytree with summed rho-weighted small-leaf grads, None elsewhere
-    W     : (n, m); rho_i applied upstream (see coded_step).
-    """
-    is_plan = lambda x: isinstance(x, LeafPlan)
-
-    def dec_one(e, sm, p):
-        if p.coded:
-            if schedule == "gather":
-                return decode_leaf_gather(e, W, p, axis_names)
-            elif schedule == "a2a":
-                return decode_leaf_a2a(e, W, p, axis_names, n)
-            raise ValueError(f"unknown schedule {schedule!r}")
-        return jax.lax.psum(sm, axis_names)
-
-    return jax.tree.map(dec_one, enc, smalls, plans,
-                        is_leaf=lambda x: x is None)
-
-
-# ------------------------------------------------- host-side per-step inputs
-def make_step_inputs(code: GradCode, stragglers: Sequence[int] | np.ndarray = (),
-                     dtype=np.float32) -> dict[str, np.ndarray]:
-    """Host-side (float64 solve) per-straggler-pattern inputs to the jitted step.
-
-    Returns:
-      mask : (n,)   1.0 at responders, 0.0 at stragglers
-      W    : (n, m) decode weights, zero rows at stragglers
-      rho  : (n, d) small-leaf weights: each subset counted once across its
-             responding holders (equal split).
-    """
-    n, d = code.n, code.d
-    st = np.zeros(n, dtype=bool)
-    st[np.asarray(list(stragglers), dtype=int)] = True
-    if st.sum() > code.s:
-        raise ValueError(f"more stragglers ({st.sum()}) than design s={code.s}")
-    resp = np.nonzero(~st)[0]
-    W = code.decode_weights(resp).astype(dtype)
-    # rho: for subset j, responding holders split weight equally
-    rho = np.zeros((n, d), dtype=dtype)
-    placement = code.placement()  # (n, d) subset ids
-    holders: dict[int, list[int]] = {}
-    for i in range(n):
-        for slot, j in enumerate(placement[i]):
-            holders.setdefault(int(j), []).append((i, slot))
-    for j, lst in holders.items():
-        live = [(i, slot) for (i, slot) in lst if not st[i]]
-        if not live:
-            raise ValueError(f"subset {j} has no responding holder")
-        for (i, slot) in live:
-            rho[i, slot] = 1.0 / len(live)
-    return {"mask": (~st).astype(dtype), "W": W, "rho": rho}
-
-
-def coding_worker_index(axis_names: str | tuple[str, ...]) -> jax.Array:
-    """Flattened worker index over the (possibly multiple) data axes."""
-    if isinstance(axis_names, str):
-        return jax.lax.axis_index(axis_names)
-    idx = jax.lax.axis_index(axis_names[0])
-    for ax in axis_names[1:]:
-        idx = idx * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
-    return idx
+__all__ = [
+    "LeafPlan", "plan_leaf", "plan_tree", "coded_fraction",
+    "encode_leaf", "encode_tree",
+    "decode_leaf_gather", "decode_leaf_a2a", "decode_tree",
+    "make_step_inputs", "coding_worker_index",
+]

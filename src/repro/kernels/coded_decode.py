@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .coded_encode import pick_tile
+
 
 def _decode_kernel_2d(f_ref, w_ref, o_ref):
     """f: (n, TV), w: (n, m), o: (TV, m)."""
@@ -36,16 +38,24 @@ def _decode_kernel_3d(f_ref, w_ref, o_ref):
     o_ref[...] = jnp.einsum("nvr,nu->vur", f, w).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("tile_v", "tile_r", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("tile_v", "tile_r", "interpret", "out_dtype"))
 def coded_decode(F: jax.Array, W: jax.Array, *, tile_v: int = 512,
-                 tile_r: int = 512, interpret: bool = False) -> jax.Array:
-    """F: (n, V) or (n, V, R); W: (n, m) -> (V, m) or (V, m, R)."""
+                 tile_r: int = 512, interpret: bool = False,
+                 out_dtype=None) -> jax.Array:
+    """F: (n, V) or (n, V, R); W: (n, m) -> (V, m) or (V, m, R).
+
+    Serves both aggregation schedules: ``gather`` passes the full (n, V[, R])
+    stack, ``a2a`` passes the exchanged (n, V/n[, R]) slice — the contraction
+    is identical.  out_dtype: in-kernel accumulation is f32; the result is
+    written in this dtype (default F's dtype; the train step asks for f32 so a
+    bf16 wire still decodes exactly once into the f32 gradient).
+    """
     n, V = F.shape[:2]
     m = W.shape[1]
-    tv = min(tile_v, V)
-    while V % tv:
-        tv -= 1
+    out_dtype = jnp.dtype(out_dtype) if out_dtype is not None else F.dtype
     if F.ndim == 2:
+        tv = pick_tile(V, tile_v, 128)
         return pl.pallas_call(
             _decode_kernel_2d,
             grid=(V // tv,),
@@ -54,13 +64,12 @@ def coded_decode(F: jax.Array, W: jax.Array, *, tile_v: int = 512,
                 pl.BlockSpec((n, m), lambda i: (0, 0)),
             ],
             out_specs=pl.BlockSpec((tv, m), lambda i: (i, 0)),
-            out_shape=jax.ShapeDtypeStruct((V, m), F.dtype),
+            out_shape=jax.ShapeDtypeStruct((V, m), out_dtype),
             interpret=interpret,
         )(F, W)
     R = F.shape[2]
-    tr = min(tile_r, R)
-    while R % tr:
-        tr -= 1
+    tv = pick_tile(V, tile_v, 8)
+    tr = pick_tile(R, tile_r, 128)
     return pl.pallas_call(
         _decode_kernel_3d,
         grid=(V // tv, R // tr),
@@ -69,6 +78,6 @@ def coded_decode(F: jax.Array, W: jax.Array, *, tile_v: int = 512,
             pl.BlockSpec((n, m), lambda i, j: (0, 0)),
         ],
         out_specs=pl.BlockSpec((tv, m, tr), lambda i, j: (i, 0, j)),
-        out_shape=jax.ShapeDtypeStruct((V, m, R), F.dtype),
+        out_shape=jax.ShapeDtypeStruct((V, m, R), out_dtype),
         interpret=interpret,
     )(F, W)

@@ -26,6 +26,19 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+def pick_tile(size: int, target: int, align: int) -> int:
+    """Largest divisor of ``size`` that is <= target, preferring multiples of
+    ``align`` (VPU lane/sublane alignment); falls back to the largest divisor."""
+    best = 1
+    for t in range(min(target, size), 0, -1):
+        if size % t:
+            continue
+        if t % align == 0:
+            return t
+        best = max(best, t)
+    return best
+
+
 def _encode_kernel_2d(g_ref, c_ref, o_ref):
     """g: (d, TV, m), c: (d, m), o: (TV,)."""
     g = g_ref[...].astype(jnp.float32)          # (d, TV, m)
@@ -40,15 +53,20 @@ def _encode_kernel_3d(g_ref, c_ref, o_ref):
     o_ref[...] = jnp.einsum("jvur,ju->vr", g, c).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("tile_v", "tile_r", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("tile_v", "tile_r", "interpret", "out_dtype"))
 def coded_encode(G: jax.Array, C: jax.Array, *, tile_v: int = 512,
-                 tile_r: int = 512, interpret: bool = False) -> jax.Array:
-    """G: (d, V, m) or (d, V, m, R); C: (d, m) -> (V,) or (V, R)."""
+                 tile_r: int = 512, interpret: bool = False,
+                 out_dtype=None) -> jax.Array:
+    """G: (d, V, m) or (d, V, m, R); C: (d, m) -> (V,) or (V, R).
+
+    out_dtype: accumulation happens in f32 in-kernel; the result is written in
+    this dtype (default: G's dtype, matching the ref oracle).
+    """
     d, V, m = G.shape[:3]
-    tv = min(tile_v, V)
-    while V % tv:
-        tv -= 1
+    out_dtype = jnp.dtype(out_dtype) if out_dtype is not None else G.dtype
     if G.ndim == 3:
+        tv = pick_tile(V, tile_v, 128)
         grid = (V // tv,)
         return pl.pallas_call(
             _encode_kernel_2d,
@@ -58,13 +76,14 @@ def coded_encode(G: jax.Array, C: jax.Array, *, tile_v: int = 512,
                 pl.BlockSpec((d, m), lambda i: (0, 0)),
             ],
             out_specs=pl.BlockSpec((tv,), lambda i: (i,)),
-            out_shape=jax.ShapeDtypeStruct((V,), G.dtype),
+            out_shape=jax.ShapeDtypeStruct((V,), out_dtype),
             interpret=interpret,
         )(G, C)
+    # trailing model-sharded dim R: tile (V, R) as (8, 128)-aligned blocks so
+    # narrow leaves (small local R after model sharding) still vectorize
     R = G.shape[3]
-    tr = min(tile_r, R)
-    while R % tr:
-        tr -= 1
+    tv = pick_tile(V, tile_v, 8)
+    tr = pick_tile(R, tile_r, 128)
     grid = (V // tv, R // tr)
     return pl.pallas_call(
         _encode_kernel_3d,
@@ -74,6 +93,6 @@ def coded_encode(G: jax.Array, C: jax.Array, *, tile_v: int = 512,
             pl.BlockSpec((d, m), lambda i, j: (0, 0)),
         ],
         out_specs=pl.BlockSpec((tv, tr), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((V, R), G.dtype),
+        out_shape=jax.ShapeDtypeStruct((V, R), out_dtype),
         interpret=interpret,
     )(G, C)

@@ -3,6 +3,10 @@
 On TPU the pallas_call lowers to Mosaic; on CPU (this container) we run the
 kernels in interpret mode for correctness, or fall back to the jnp oracle
 (ref.py) — selectable via ``mode``.
+
+NOTE: the train step no longer calls these directly — it goes through
+``repro.coding.backends`` (ref/pallas ``CodecBackend`` objects with explicit
+dispatch).  These wrappers remain for ad-hoc kernel use and the kernel tests.
 """
 from __future__ import annotations
 

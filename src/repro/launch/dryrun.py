@@ -25,6 +25,7 @@ import traceback     # noqa: E402
 
 import jax           # noqa: E402
 
+from repro.compat import set_mesh                   # noqa: E402
 from repro.configs import ARCHS                     # noqa: E402
 from repro.launch import lowering                   # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
@@ -35,12 +36,12 @@ RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
 
 def run_one(arch: str, shape: str, mesh_name: str, schedule: str,
             out_dir: pathlib.Path, code_spec: str | None = None,
-            tag: str = "", opt: str = "") -> dict:
+            tag: str = "", opt: str = "", backend: str = "auto") -> dict:
     mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
     t0 = time.time()
     rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
            "schedule": schedule, "devices": int(mesh.size), "tag": tag,
-           "opt": opt}
+           "opt": opt, "backend": backend}
     kw = {}
     opts = set((opt or "").split(",")) - {""}
     if "attn_remat" in opts:
@@ -54,6 +55,7 @@ def run_one(arch: str, shape: str, mesh_name: str, schedule: str,
         _cs.ENC_CONSTRAINT = True
     if SHAPES[shape].kind == "train":
         kw["schedule"] = schedule
+        kw["backend"] = backend
         if "bf16_wire" in opts:
             kw["encode_dtype"] = "bfloat16"
         if code_spec:
@@ -66,13 +68,17 @@ def run_one(arch: str, shape: str, mesh_name: str, schedule: str,
     except lowering.SkipLowering as e:
         rec.update(status="skipped", reason=str(e))
         return rec
-    with jax.sharding.set_mesh(mesh):
+    with set_mesh(mesh):
         lowered = fn.lower(*args)
         t_lower = time.time() - t0
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # old jax: one entry per device
+        cost = cost[0] if cost else None
+    if isinstance(mem, (list, tuple)):
+        mem = mem[0] if mem else None
     from repro.launch import hlo_cost
     hlo = hlo_cost.analyze(compiled.as_text())
     rec.update(
@@ -102,6 +108,9 @@ def main() -> None:
     ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
     ap.add_argument("--schedule", default="gather",
                     choices=["gather", "a2a", "psum"])
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "ref", "pallas", "interpret"],
+                    help="codec compute backend for the train step")
     ap.add_argument("--code", default=None,
                     help="d,s,m triple for the gradient code (default 3,1,2)")
     ap.add_argument("--opt", default="",
@@ -129,7 +138,8 @@ def main() -> None:
                 t0 = time.time()
                 try:
                     rec = run_one(arch, shape, mesh_name, args.schedule,
-                                  out_dir, args.code, args.tag, args.opt)
+                                  out_dir, args.code, args.tag, args.opt,
+                                  args.backend)
                 except Exception as e:  # noqa: BLE001 — record and continue
                     rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
                            "schedule": args.schedule, "status": "error",

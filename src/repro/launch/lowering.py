@@ -72,7 +72,8 @@ def train_batch_shapes(cfg, n: int, d: int, shape) -> dict:
 def build_train_lowering(arch: str, shape_name: str, mesh, *,
                          schedule: str = "gather", code=None,
                          optimizer: str = "adamw",
-                         encode_dtype: str = "float32"):
+                         encode_dtype: str = "float32",
+                         backend: str = "auto"):
     """Returns (jitted_fn, args) ready for .lower(*args)."""
     cfg = dryrun_config(arch)
     shape = SHAPES[shape_name]
@@ -80,7 +81,7 @@ def build_train_lowering(arch: str, shape_name: str, mesh, *,
     code = code or default_code(n)
     opt = get_optimizer(optimizer, 1e-3)
     arts = make_coded_train_step(cfg, code, mesh, opt, schedule=schedule,
-                                 encode_dtype=encode_dtype)
+                                 encode_dtype=encode_dtype, backend=backend)
 
     pshapes = jax.eval_shape(lambda: model_api.init(jax.random.PRNGKey(0), cfg))
     oshapes = jax.eval_shape(opt.init, pshapes)
@@ -94,7 +95,8 @@ def build_train_lowering(arch: str, shape_name: str, mesh, *,
                                 is_leaf=lambda x: isinstance(x, P))
     fn = jax.jit(smapped, in_shardings=ns(in_specs), out_shardings=ns(out_specs),
                  donate_argnums=(0, 1))
-    return fn, args, {"coded_fraction": arts.coded_fraction}
+    return fn, args, {"coded_fraction": arts.coded_fraction,
+                  "codec_backend": arts.codec.backend.name}
 
 
 def build_prefill_lowering(arch: str, shape_name: str, mesh):

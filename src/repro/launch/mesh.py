@@ -2,7 +2,7 @@
 touches jax device state."""
 from __future__ import annotations
 
-import jax
+from repro.compat import AXIS_TYPE_AUTO, make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -11,15 +11,14 @@ def make_production_mesh(*, multi_pod: bool = False):
     devices (the dry-run forces host-platform placeholders)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, axis_types=(AXIS_TYPE_AUTO,) * len(axes))
 
 
 def make_local_mesh(n_data: int = 1, n_model: int = 1):
     """Small mesh over however many (real or forced) devices exist —
     used by CPU examples, tests, and smoke training."""
-    return jax.make_mesh((n_data, n_model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((n_data, n_model), ("data", "model"),
+                     axis_types=(AXIS_TYPE_AUTO,) * 2)
 
 
 def data_axes_of(mesh) -> tuple[str, ...]:

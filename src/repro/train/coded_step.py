@@ -17,27 +17,26 @@ subsets.  The step (manual over data axes, GSPMD-auto over 'model'):
      (zero rows at stragglers) via the gather or a2a schedule,
   5. runs the optimizer update (replicated over data axes, model-sharded).
 
-``schedule``:
-  - "gather": paper-faithful master emulation (all_gather encodings, decode
-    locally);
-  - "a2a": beyond-paper TPU-native (all_to_all chunks, decode 1/n slice,
-    all_gather decoded slices) — ~l(1/m+1) bytes received vs ~2l for plain
-    all-reduce;
-  - "psum": uncoded baseline (straggler-aware rho-weighted all-reduce).
+All coding phases are delegated to a ``repro.coding.Codec``: ``schedule``
+picks the collective choreography (gather / a2a / psum — see
+``repro.coding.schedules``), ``backend`` the encode/decode implementation
+("auto" -> Pallas kernels on TPU, einsum reference elsewhere; "pallas" forces
+the kernels, in interpret mode off-TPU).
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Callable, Sequence
+import warnings
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import coding
+from repro.compat import collectives_ok, shard_map
 from repro.core import GradCode
-from repro.core import coded_allreduce as ca
 from repro.models import api as model_api
 from repro.optim import Optimizer
 
@@ -59,6 +58,7 @@ class StepArtifacts:
     out_specs: tuple
     plans: PyTree
     coded_fraction: float
+    codec: coding.Codec | None = None
 
 
 def _data_axes(mesh) -> tuple[str, ...]:
@@ -73,7 +73,8 @@ def make_coded_train_step(cfg, code: GradCode, mesh, optimizer: Optimizer,
                           *, schedule: str = "gather",
                           grad_scale: float | None = None,
                           encode_dtype: str = "float32",
-                          use_kernels: bool = False) -> StepArtifacts:
+                          backend: str | coding.CodecBackend = "auto",
+                          use_kernels: bool | None = None) -> StepArtifacts:
     """Build the shard_map'd coded train step for one architecture.
 
     grad_scale: decoded gradients are multiplied by this (default 1/n so the
@@ -83,7 +84,15 @@ def make_coded_train_step(cfg, code: GradCode, mesh, optimizer: Optimizer,
     encode_dtype: wire dtype of the transmitted encodings (the paper uses
     f32; "bfloat16" halves the collective bytes at ~3 decimal digits of
     gradient precision — a beyond-paper lever recorded in §Perf).
+
+    backend: codec compute backend — "auto" | "ref" | "pallas" | "interpret"
+    or a ``coding.CodecBackend`` instance.  use_kernels is the deprecated
+    boolean spelling of the same choice (True -> "pallas").
     """
+    if use_kernels is not None:
+        warnings.warn("use_kernels is deprecated; pass backend='pallas' "
+                      "(or 'ref') instead", DeprecationWarning, stacklevel=2)
+        backend = "pallas" if use_kernels else "ref"
     data_axes = _data_axes(mesh)
     n = _axis_prod(mesh, data_axes)
     if code.n != n:
@@ -93,14 +102,28 @@ def make_coded_train_step(cfg, code: GradCode, mesh, optimizer: Optimizer,
     if grad_scale is None:
         grad_scale = 1.0 if cfg.family == "linear" else 1.0 / n
 
+    codec = coding.make_codec(code, schedule=schedule, backend=backend,
+                              wire_dtype=encode_dtype)
+    # Old-jax shard_map partial-auto cannot lower scan/all_gather/all_to_all
+    # inside the manual region when a >1 auto (model) axis remains: unroll the
+    # subset loop and decode via the schedules' psum emulation there.
+    degraded = not collectives_ok(mesh, data_axes)
+
+    def scan_subsets(f, init, xs):
+        if not degraded:
+            return jax.lax.scan(f, init, xs)
+        carry = init
+        for i in range(code.d):
+            carry, _ = f(carry, jax.tree.map(lambda x: x[i], xs))
+        return carry, None
+
     # --- shapes / specs ------------------------------------------------
     pshapes = jax.eval_shape(lambda: model_api.init(jax.random.PRNGKey(0), cfg))
     pspecs = sharding.param_specs(pshapes, ms)
     oshapes = jax.eval_shape(optimizer.init, pshapes)
     ospecs = sharding.opt_state_specs(oshapes, pspecs)
-    n_split = n if schedule == "a2a" else 1
-    plans = ca.plan_tree(pshapes, pspecs, code.m, n_split)
-    coded_frac = ca.coded_fraction(pshapes, plans)
+    plans = codec.plan(pshapes, pspecs)
+    coded_frac = codec.coded_fraction(pshapes, plans)
 
     # §Perf lever (enc_constraint): the encoding of a model-sharded leaf can
     # silently lose its 'model' sharding at the manual-collective boundary
@@ -116,21 +139,21 @@ def make_coded_train_step(cfg, code: GradCode, mesh, optimizer: Optimizer,
 
     enc_specs = jax.tree.map(
         _enc_spec, plans, pspecs,
-        is_leaf=lambda x: isinstance(x, ca.LeafPlan))
+        is_leaf=lambda x: isinstance(x, coding.LeafPlan))
 
     C = jnp.asarray(code.C, jnp.float32)           # (n, d, m) host constant
 
-    kern = None
-    if use_kernels:
-        from repro.kernels import ops as kern  # lazy: not needed on the CPU path
-
-    def body(params, opt_state, batch, W, mask, rho):
+    # The per-worker rows of C/mask/rho enter the shard_map body sharded over
+    # the data axes (dim 0), so each worker reads its own row locally — no
+    # axis_index/dynamic gather in the step (axis_index lowers to PartitionId,
+    # which SPMD partitioning rejects when GSPMD-auto axes remain).
+    def body(params, opt_state, batch, W, mask, rho, Csh, Wsh):
         # local batch leaves: (1, d, b, ...) -> (d, b, ...)
         lb = jax.tree.map(lambda x: x[0], batch)
-        idx = ca.coding_worker_index(data_axes)
-        Ci = jax.lax.dynamic_index_in_dim(C, idx, 0, keepdims=False)  # (d, m)
-        rho_i = jax.lax.dynamic_index_in_dim(rho, idx, 0, keepdims=False)  # (d,)
-        mask_i = jax.lax.dynamic_index_in_dim(mask, idx, 0, keepdims=False)
+        Ci = Csh[0]       # (d, m)   this worker's coefficient rows
+        W_row = Wsh[0]    # (m,)     this worker's decode-weight row
+        rho_i = rho[0]    # (d,)
+        mask_i = mask[0]  # ()
 
         def per_subset(carry, xs):
             enc, small, loss_acc = carry
@@ -140,32 +163,26 @@ def make_coded_train_step(cfg, code: GradCode, mesh, optimizer: Optimizer,
             def fold(e, gleaf, pl):
                 if not pl.coded:
                     return e + rj * gleaf.astype(jnp.float32)
-                contrib = ca.encode_leaf(gleaf.astype(jnp.float32), cj, pl)
+                contrib = codec.encode_leaf(gleaf.astype(jnp.float32), cj, pl)
                 # contribution arrives as (Dg/m, *rest-moved); match e's layout
                 return e + contrib
 
             enc = jax.tree.map(fold, enc, g, plans)
             return (enc, small, loss_acc + rj * lval), None
 
-        def enc0(p, pl):
-            if not pl.coded:
-                return jnp.zeros(p.shape, jnp.float32)
-            x = jnp.moveaxis(jnp.zeros(p.shape, jnp.float32), pl.group_dim, 0)
-            return jnp.zeros((x.shape[0] // code.m, *x.shape[1:]), jnp.float32)
-
-        init = (jax.tree.map(enc0, params, plans), None, jnp.zeros((), jnp.float32))
-        (enc, _, loss_sum), _ = jax.lax.scan(per_subset, init, (lb, Ci, rho_i))
+        init = (jax.tree.map(codec.encoding_zero, params, plans),
+                None, jnp.zeros((), jnp.float32))
+        (enc, _, loss_sum), _ = scan_subsets(per_subset, init, (lb, Ci, rho_i))
 
         # stragglers transmit nothing — zero the payload to prove independence
-        wire = jnp.dtype(encode_dtype)
         enc = jax.tree.map(
-            lambda e, pl: (e * mask_i).astype(wire) if pl.coded else e,
+            lambda e, pl: codec.to_wire(e, mask_i) if pl.coded else e,
             enc, plans)
         if ENC_CONSTRAINT:
             flat_e, td = jax.tree.flatten(enc)
             flat_s = td.flatten_up_to(enc_specs)
             flat_p = [p for p in jax.tree.leaves(
-                plans, is_leaf=lambda x: isinstance(x, ca.LeafPlan))]
+                plans, is_leaf=lambda x: isinstance(x, coding.LeafPlan))]
             flat_e = [jax.lax.with_sharding_constraint(e, s)
                       if (pl.coded and s is not None and "model" in tuple(s))
                       else e
@@ -175,11 +192,8 @@ def make_coded_train_step(cfg, code: GradCode, mesh, optimizer: Optimizer,
         def dec_one(e, pl):
             if not pl.coded:
                 return jax.lax.psum(e, data_axes)
-            if schedule == "gather":
-                return ca.decode_leaf_gather(e, W, pl, data_axes)
-            if schedule == "a2a":
-                return ca.decode_leaf_a2a(e, W, pl, data_axes, n)
-            raise ValueError(schedule)
+            return codec.decode_leaf(e, W, pl, data_axes,
+                                     W_row=W_row, emulate=degraded)
 
         grads = jax.tree.map(dec_one, enc, plans)
         grads = jax.tree.map(lambda g_: g_ * grad_scale, grads)
@@ -191,11 +205,10 @@ def make_coded_train_step(cfg, code: GradCode, mesh, optimizer: Optimizer,
         return new_params, new_opt, metrics
 
     # psum baseline: plain rho-weighted all-reduce (uncoded / straggler-aware)
-    def body_psum(params, opt_state, batch, W, mask, rho):
+    def body_psum(params, opt_state, batch, W, mask, rho, Csh, Wsh):
         lb = jax.tree.map(lambda x: x[0], batch)
-        idx = ca.coding_worker_index(data_axes)
-        rho_i = jax.lax.dynamic_index_in_dim(rho, idx, 0, keepdims=False)
-        mask_i = jax.lax.dynamic_index_in_dim(mask, idx, 0, keepdims=False)
+        rho_i = rho[0]
+        mask_i = mask[0]
 
         def per_subset(carry, xs):
             acc, loss_acc = carry
@@ -206,14 +219,14 @@ def make_coded_train_step(cfg, code: GradCode, mesh, optimizer: Optimizer,
 
         init = (jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
                 jnp.zeros((), jnp.float32))
-        (acc, loss_sum), _ = jax.lax.scan(per_subset, init, (lb, rho_i))
+        (acc, loss_sum), _ = scan_subsets(per_subset, init, (lb, rho_i))
         grads = jax.tree.map(lambda a: jax.lax.psum(a, data_axes) * grad_scale, acc)
         gnorm = jnp.sqrt(sum(jnp.sum(g_ * g_) for g_ in jax.tree.leaves(grads)))
         loss_global = jax.lax.psum(loss_sum * mask_i, data_axes) / n
         new_params, new_opt = optimizer.update(grads, opt_state, params)
         return new_params, new_opt, {"loss": loss_global[None], "grad_norm": gnorm[None]}
 
-    fn = body_psum if schedule == "psum" else body
+    fn = body_psum if not codec.schedule.uses_encoding else body
 
     # --- wrap in shard_map over the data axes (model stays auto/GSPMD) --
     # shard_map's in/out_specs may only mention the manual (data) axes; the
@@ -234,13 +247,23 @@ def make_coded_train_step(cfg, code: GradCode, mesh, optimizer: Optimizer,
 
     def make(batch_shapes):
         bspecs = sharding.batch_specs(batch_shapes, data_axes)
+        # worker-row operands: dim 0 split over the (flattened) data axes
+        dspec = P(data_axes if len(data_axes) > 1 else data_axes[0])
         in_specs = (pspecs, ospecs, bspecs, P(), P(), P())
         out_specs = (pspecs, ospecs, {"loss": P(), "grad_norm": P()})
-        smapped = jax.shard_map(fn, mesh=mesh,
-                                in_specs=_strip(in_specs),
-                                out_specs=_strip(out_specs),
-                                axis_names=set(data_axes), check_vma=False)
-        return smapped, in_specs, out_specs
+        smapped = shard_map(fn, mesh=mesh,
+                            in_specs=(_strip((pspecs, ospecs, bspecs, P()))
+                                      + (dspec, dspec, dspec, dspec)),
+                            out_specs=_strip(out_specs),
+                            axis_names=set(data_axes), check_vma=False)
+
+        def stepfn(params, opt_state, batch, W, mask, rho):
+            # W enters twice: replicated (decode needs all n rows) and split
+            # over workers (each worker's own row, for the emulated decode);
+            # mask/rho/C are split so each worker sees only its own row
+            return smapped(params, opt_state, batch, W, mask, rho, C, W)
+
+        return stepfn, in_specs, out_specs
 
     return StepArtifacts(step=make, in_specs=(pspecs, ospecs), out_specs=None,
-                         plans=plans, coded_fraction=coded_frac)
+                         plans=plans, coded_fraction=coded_frac, codec=codec)

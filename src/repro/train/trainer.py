@@ -18,8 +18,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.coding import make_step_inputs
+from repro.compat import set_mesh
 from repro.core import GradCode
-from repro.core.coded_allreduce import make_step_inputs
 from repro.data import CodedBatcher
 from repro.optim import Optimizer
 
@@ -33,6 +34,7 @@ class Trainer:
     mesh: Any
     optimizer: Optimizer
     schedule: str = "gather"
+    backend: str = "auto"              # codec backend: auto | ref | pallas
     straggler_mode: str = "none"       # none | random | fixed
     fixed_stragglers: tuple = ()
     seed: int = 0
@@ -42,10 +44,11 @@ class Trainer:
     def __post_init__(self):
         from repro.models import api as model_api
         self.arts = make_coded_train_step(self.cfg, self.code, self.mesh,
-                                          self.optimizer, schedule=self.schedule)
+                                          self.optimizer, schedule=self.schedule,
+                                          backend=self.backend)
         self.batcher = CodedBatcher(self.code)
         key = jax.random.PRNGKey(self.seed)
-        with jax.sharding.set_mesh(self.mesh):
+        with set_mesh(self.mesh):
             self.params = model_api.init(key, self.cfg)
             self.opt_state = self.optimizer.init(self.params)
         self._jitted = {}
@@ -59,7 +62,7 @@ class Trainer:
                 {"params": self.params, "opt_state": self.opt_state})
             if restored is not None:
                 state, meta = restored
-                with jax.sharding.set_mesh(self.mesh):
+                with set_mesh(self.mesh):
                     self.params = jax.tree.map(jnp.asarray, state["params"])
                     self.opt_state = jax.tree.map(jnp.asarray, state["opt_state"])
                 self._step_count = int(meta.get("step", 0))
@@ -92,7 +95,7 @@ class Trainer:
             self._jitted[keyshape] = jax.jit(smapped, donate_argnums=(0, 1))
         fn = self._jitted[keyshape]
         inp = make_step_inputs(self.code, self._stragglers())
-        with jax.sharding.set_mesh(self.mesh):
+        with set_mesh(self.mesh):
             self.params, self.opt_state, metrics = fn(
                 self.params, self.opt_state,
                 jax.tree.map(jnp.asarray, placed),

@@ -3,6 +3,8 @@ properties on the placement bijection)."""
 import jax
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # declared in pyproject [test]; optional at runtime
 from hypothesis import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 

@@ -1,5 +1,8 @@
 """Hypothesis property-based tests on the system's invariants."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # declared in pyproject [test]; optional at runtime
 from hypothesis import given, settings, strategies as st
 
 from repro.core import GradCode, tradeoff

@@ -4,6 +4,8 @@ import math
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # declared in pyproject [test]; optional at runtime
 from hypothesis import given, settings, strategies as st
 
 from repro.core import GradCode
