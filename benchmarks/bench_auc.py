@@ -6,11 +6,17 @@ Section-VI runtime model's Monte-Carlo draws).
 
 Output: time to reach the target AUC for each scheme — the paper's claim is
 that the m>1 curve sits strictly left of the others."""
+
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core.runtime_model import RuntimeParams, optimal_triple, simulate_runtimes
+from repro.bench import BenchResult, BenchSpec, capture_env, register
+from repro.core.runtime_model import (
+    RuntimeParams,
+    optimal_triple,
+    simulate_runtimes,
+)
 from repro.data import synthetic_logistic_dataset
 
 
@@ -43,7 +49,7 @@ def train_nag(X, y, Xte, yte, iters: int, lr: float):
     x_prev = beta.copy()
     lam = 0.0
     aucs = []
-    for t in range(iters):
+    for _ in range(iters):
         z = X @ beta
         p = 1.0 / (1.0 + np.exp(-z))
         g = X.T @ (p - y) / n
@@ -56,9 +62,10 @@ def train_nag(X, y, Xte, yte, iters: int, lr: float):
     return np.array(aucs)
 
 
-def run(iters: int = 60, n_workers: int = 10, seed: int = 0) -> list[str]:
-    X, y, _ = synthetic_logistic_dataset(n_samples=4096, dim=512, seed=seed)
-    ntr = 3072
+def simulate(iters: int = 60, n_workers: int = 10, seed: int = 0,
+             n_samples: int = 4096, dim: int = 512, npts: int = 30_000):
+    X, y, _ = synthetic_logistic_dataset(n_samples=n_samples, dim=dim, seed=seed)
+    ntr = (n_samples * 3) // 4
     Xtr, ytr, Xte, yte = X[:ntr], y[:ntr], X[ntr:], y[ntr:]
     aucs = train_nag(Xtr, ytr, Xte, yte, iters, lr=2.0)
 
@@ -66,8 +73,8 @@ def run(iters: int = 60, n_workers: int = 10, seed: int = 0) -> list[str]:
     params = RuntimeParams(n=n_workers, lambda1=0.5, lambda2=0.2, t1=0.5, t2=16.0)
     rng_seed = seed + 1
     # per-iteration simulated times for the three schemes
-    (d1, s1, m1), _ = optimal_triple(params, npts=30_000, restrict_m1=True)
-    (d2, s2, m2), _ = optimal_triple(params, npts=30_000)
+    (d1, s1, m1), _ = optimal_triple(params, npts=npts, restrict_m1=True)
+    (d2, s2, m2), _ = optimal_triple(params, npts=npts)
     t_naive = (params.t1 + np.random.default_rng(rng_seed).exponential(
         1 / params.lambda1, (iters, n_workers))
         + params.t2 + np.random.default_rng(rng_seed + 1).exponential(
@@ -75,24 +82,57 @@ def run(iters: int = 60, n_workers: int = 10, seed: int = 0) -> list[str]:
     # simulate_runtimes returns T_tot draws (constants included)
     t_m1 = simulate_runtimes(params, d1, s1, m1, iters, rng_seed + 2)
     t_ours = simulate_runtimes(params, d2, s2, m2, iters, rng_seed + 3)
+    return aucs, {"naive": t_naive, "m1": t_m1, "ours": t_ours}
 
-    out = []
+
+def bench_results(quick: bool = False) -> list[BenchResult]:
+    iters = 25 if quick else 60
+    n_samples = 1024 if quick else 4096
+    dim = 128 if quick else 512
+    npts = 10_000 if quick else 30_000
+    aucs, times = simulate(iters=iters, n_samples=n_samples, dim=dim, npts=npts)
+
     target = 0.5 * (aucs[0] + aucs.max())  # mid-range target AUC
     final = aucs[-1]
-    for name, times in [("naive", t_naive), ("m1", t_m1), ("ours", t_ours)]:
-        cum = np.cumsum(times)
-        k = int(np.argmax(aucs >= target))
-        out.append(f"auc_vs_time,scheme={name},target_auc={target:.4f},"
-                   f"time_to_target={cum[k]:.1f},final_auc={final:.4f},"
-                   f"total_time={cum[-1]:.1f}")
-    # the paper's qualitative claim: ours strictly fastest to target
-    cum_n = np.cumsum(t_naive)
-    cum_1 = np.cumsum(t_m1)
-    cum_o = np.cumsum(t_ours)
     k = int(np.argmax(aucs >= target))
-    out.append(f"auc_claim,ours_left_of_m1={bool(cum_o[k] < cum_1[k])},"
-               f"ours_left_of_naive={bool(cum_o[k] < cum_n[k])}")
-    return out
+    lines = []
+    metrics: dict[str, float] = {"target_auc": round(float(target), 4),
+                                 "final_auc": round(float(final), 4)}
+    cum = {}
+    for name, t in times.items():
+        cum[name] = np.cumsum(t)
+        metrics[f"time_to_target_{name}"] = round(float(cum[name][k]), 2)
+        lines.append(f"auc_vs_time,scheme={name},target_auc={target:.4f},"
+                     f"time_to_target={cum[name][k]:.1f},final_auc={final:.4f},"
+                     f"total_time={cum[name][-1]:.1f}")
+    # the paper's qualitative claim: ours strictly fastest to target
+    metrics["ours_left_of_m1"] = float(cum["ours"][k] < cum["m1"][k])
+    metrics["ours_left_of_naive"] = float(cum["ours"][k] < cum["naive"][k])
+    lines.append(f"auc_claim,ours_left_of_m1={bool(metrics['ours_left_of_m1'])},"
+                 f"ours_left_of_naive={bool(metrics['ours_left_of_naive'])}")
+    result = BenchResult(
+        name="auc_vs_time",
+        metrics=metrics,
+        params={"iters": iters, "n_samples": n_samples, "dim": dim,
+                "n_workers": 10, "npts": npts, "quick": quick},
+        env=capture_env(),
+        gates={"ours_left_of_m1": "max", "ours_left_of_naive": "max",
+               "final_auc": "max"},
+        extra={"lines": lines},
+    )
+    return [result]
+
+
+register(BenchSpec(
+    name="auc",
+    description="Fig 4 AUC vs time",
+    fn=bench_results,
+    tags=("model", "data"),
+))
+
+
+def run() -> list[str]:
+    return bench_results(False)[0].extra["lines"]
 
 
 if __name__ == "__main__":

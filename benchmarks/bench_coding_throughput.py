@@ -7,6 +7,7 @@ master's O(n^3) per-pattern cost the paper argues is negligible).
   PYTHONPATH=src python benchmarks/bench_coding_throughput.py --backend both
   PYTHONPATH=src python benchmarks/bench_coding_throughput.py --backend ref
 """
+
 from __future__ import annotations
 
 import argparse
@@ -16,59 +17,114 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.bench import (
+    BenchResult,
+    BenchSpec,
+    TimerPolicy,
+    capture_env,
+    register,
+    time_callable,
+)
 from repro.coding import resolve_backend
 from repro.core import make_code
 
 
-def _time(fn, *args, reps: int = 20) -> float:
-    fn(*args)  # warmup/compile
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps * 1e6  # us
-
-
-def _bench_backend(name: str, out: list[str]) -> None:
+def _bench_backend(name: str, quick: bool) -> BenchResult:
     code = make_code(16, 4, 1, 3)
     bk = resolve_backend(name)
     interp = bool(getattr(bk, "interpret", False))
     # the Pallas interpreter is orders of magnitude slower than compiled
     # Mosaic — keep its problem sizes honest-but-small off TPU
-    sizes = (1 << 12, 1 << 14) if interp else (1 << 16, 1 << 20, 1 << 22)
-    reps = 5 if interp else 20
+    if quick:
+        sizes = (1 << 12,)
+        policy = TimerPolicy(warmup=1, reps=2 if interp else 5)
+    elif interp:
+        sizes = (1 << 12, 1 << 14)
+        policy = TimerPolicy(warmup=1, reps=5)
+    else:
+        sizes = (1 << 16, 1 << 20, 1 << 22)
+        policy = TimerPolicy(warmup=1, reps=20)
     enc = jax.jit(lambda G, C: bk.encode(G, C))
     dec = jax.jit(lambda F, W: bk.decode(F, W))
     rng = np.random.default_rng(0)
+    metrics: dict[str, float] = {}
+    lines = []
     for l in sizes:
         V = l // code.m
         G = jnp.asarray(rng.standard_normal((code.d, V, code.m)), jnp.float32)
         C = jnp.asarray(code.C[0], jnp.float32)
         F = jnp.asarray(rng.standard_normal((code.n, V)), jnp.float32)
         W = jnp.asarray(code.decode_weights(range(1, 16)), jnp.float32)
-        t_enc = _time(enc, G, C, reps=reps)
-        t_dec = _time(dec, F, W, reps=reps)
+        t_enc = time_callable(enc, G, C, policy=policy).mean_s * 1e6
+        t_dec = time_callable(dec, F, W, policy=policy).mean_s * 1e6
         gbps_enc = G.size * 4 / (t_enc / 1e6) / 1e9
         gbps_dec = F.size * 4 / (t_dec / 1e6) / 1e9
-        out.append(f"coding_throughput,backend={bk.name}"
-                   f"{',interpret' if interp else ''},l={l},"
-                   f"encode_us={t_enc:.0f},decode_us={t_dec:.0f},"
-                   f"enc_GBps={gbps_enc:.1f},dec_GBps={gbps_dec:.1f}")
+        metrics[f"encode_us_l{l}"] = round(t_enc, 1)
+        metrics[f"decode_us_l{l}"] = round(t_dec, 1)
+        metrics[f"encode_GBps_l{l}"] = round(gbps_enc, 3)
+        metrics[f"decode_GBps_l{l}"] = round(gbps_dec, 3)
+        lines.append(f"coding_throughput,backend={bk.name}"
+                     f"{',interpret' if interp else ''},l={l},"
+                     f"encode_us={t_enc:.0f},decode_us={t_dec:.0f},"
+                     f"enc_GBps={gbps_enc:.1f},dec_GBps={gbps_dec:.1f}")
+    return BenchResult(
+        name=f"coding_throughput_{bk.name}",
+        metrics=metrics,
+        params={"code": {"n": 16, "d": 4, "s": 1, "m": 3},
+                "sizes": list(sizes), "interpret": interp, "quick": quick},
+        env=capture_env(),
+        timing={"warmup": policy.warmup, "reps": policy.reps},
+        # raw wall-clock: CI hardware varies too much to gate these
+        gates={},
+        extra={"lines": lines},
+    )
 
 
-def run(backends: tuple[str, ...] = ("ref", "pallas")) -> list[str]:
-    out: list[str] = []
-    for name in backends:
-        _bench_backend(name, out)
-    # host-side decode-weight solve (per straggler pattern)
+def _bench_solve(quick: bool) -> BenchResult:
+    metrics: dict[str, float] = {}
+    lines = []
+    reps = 20 if quick else 100
     for n in (16, 32):
         c = make_code(n, 4, 1, 3)
         resp = list(range(1, n))
         t0 = time.perf_counter()
-        for _ in range(100):
+        for _ in range(reps):
             c.decode_weights(resp)
-        t = (time.perf_counter() - t0) / 100 * 1e6
-        out.append(f"decode_weight_solve,n={n},us={t:.0f}")
+        t = (time.perf_counter() - t0) / reps * 1e6
+        metrics[f"solve_us_n{n}"] = round(t, 1)
+        lines.append(f"decode_weight_solve,n={n},us={t:.0f}")
+    return BenchResult(
+        name="decode_weight_solve",
+        metrics=metrics,
+        params={"reps": reps, "quick": quick},
+        env=capture_env(),
+        timing={"warmup": 0, "reps": reps},
+        gates={},
+        extra={"lines": lines},
+    )
+
+
+def bench_results(quick: bool = False,
+                  backends: tuple[str, ...] = ("ref", "pallas")) -> list[BenchResult]:
+    if quick:
+        backends = ("ref",)
+    out = [_bench_backend(name, quick) for name in backends]
+    out.append(_bench_solve(quick))
+    return out
+
+
+register(BenchSpec(
+    name="throughput",
+    description="encode/decode microbench",
+    fn=bench_results,
+    tags=("kernels",),
+))
+
+
+def run(backends: tuple[str, ...] = ("ref", "pallas")) -> list[str]:
+    out: list[str] = []
+    for r in bench_results(False, backends=backends):
+        out.extend(r.extra["lines"])
     return out
 
 

@@ -8,12 +8,17 @@ comparable (the paper's EC2 regime: t2/t1 large because l = 343474 floats
 over TCP dominates a small logistic-gradient compute).  The paper reports
 >= 32% win vs naive and >= 23% vs m=1; the simulation reproduces that band.
 """
+
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core.runtime_model import (RuntimeParams, optimal_triple,
-                                      simulate_runtimes)
+from repro.bench import BenchResult, BenchSpec, capture_env, register
+from repro.core.runtime_model import (
+    RuntimeParams,
+    optimal_triple,
+    simulate_runtimes,
+)
 
 # calibrated to the EC2 t2.micro regime of Section V (comm-heavy: an
 # l=343474-float gradient over TCP dwarfs the logistic-gradient compute);
@@ -31,10 +36,10 @@ def naive_runtime(params: RuntimeParams, iters: int, seed: int) -> np.ndarray:
     return (comp + comm).max(axis=1)
 
 
-def bench(n: int, iters: int = 4000, seed: int = 0):
+def bench(n: int, iters: int = 4000, npts: int = 30_000, seed: int = 0):
     params = RuntimeParams(n=n, **CALIB)
-    (d1, s1, m1), _ = optimal_triple(params, npts=30_000, restrict_m1=True)
-    (d2, s2, m2), _ = optimal_triple(params, npts=30_000)
+    (d1, s1, m1), _ = optimal_triple(params, npts=npts, restrict_m1=True)
+    (d2, s2, m2), _ = optimal_triple(params, npts=npts)
     t_naive = naive_runtime(params, iters, seed).mean()
     # simulate_runtimes returns T_tot draws (constants included)
     t_m1 = simulate_runtimes(params, d1, s1, m1, iters, seed + 1).mean()
@@ -49,16 +54,46 @@ def bench(n: int, iters: int = 4000, seed: int = 0):
     }
 
 
-def run() -> list[str]:
-    out = []
-    for n in (10, 15, 20):
-        r = bench(n)
-        out.append(
+def bench_results(quick: bool = False) -> list[BenchResult]:
+    ns = (10,) if quick else (10, 15, 20)
+    iters = 1000 if quick else 4000
+    npts = 10_000 if quick else 30_000
+    metrics: dict[str, float] = {}
+    lines = []
+    rows = []
+    for n in ns:
+        r = bench(n, iters=iters, npts=npts)
+        rows.append(r)
+        metrics[f"win_vs_naive_n{n}"] = round(float(r["win_vs_naive"]), 4)
+        metrics[f"win_vs_m1_n{n}"] = round(float(r["win_vs_m1"]), 4)
+        metrics[f"runtime_ours_n{n}"] = round(float(r["ours"]), 4)
+        lines.append(
             f"fig3_sim,n={n},naive={r['naive']:.2f},"
             f"m1={r['m1']:.2f}@{r['m1_triple']},"
             f"ours={r['ours']:.2f}@{r['ours_triple']},"
             f"win_vs_naive={r['win_vs_naive']:.1%},win_vs_m1={r['win_vs_m1']:.1%}")
-    return out
+    result = BenchResult(
+        name="fig3_sim",
+        metrics=metrics,
+        params={"ns": list(ns), "iters": iters, "npts": npts,
+                "quick": quick, **CALIB},
+        env=capture_env(),
+        gates={"win_vs_naive_n10": "max", "win_vs_m1_n10": "max"},
+        extra={"lines": lines, "rows": rows},
+    )
+    return [result]
+
+
+register(BenchSpec(
+    name="fig3",
+    description="Fig 3 runtime comparison (Monte-Carlo)",
+    fn=bench_results,
+    tags=("model",),
+))
+
+
+def run() -> list[str]:
+    return bench_results(False)[0].extra["lines"]
 
 
 if __name__ == "__main__":

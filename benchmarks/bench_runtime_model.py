@@ -4,12 +4,18 @@ Table 1 (n=8, lambda1=.8, lambda2=.1, t1=1.6, t2=6): E[T_tot] for all (d, m),
 expected optimum (d,s,m)=(4,1,3) with E=21.3697, uncoded 36.1138, best m=1
 coded 24.1063.  Tables 2-3: optimal triples as (lambda2,t2) / (lambda1,t1)
 vary."""
+
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core.runtime_model import (RuntimeParams, expected_total_runtime,
-                                      optimal_triple, runtime_table)
+from repro.bench import BenchResult, BenchSpec, capture_env, register
+from repro.core.runtime_model import (
+    RuntimeParams,
+    expected_total_runtime,
+    optimal_triple,
+    runtime_table,
+)
 
 PAPER_N8 = {
     (1, 1): 36.1138, (8, 1): 24.1063, (2, 2): 23.1036, (4, 3): 21.3697,
@@ -39,10 +45,10 @@ def bench_table1(npts: int = 200_000) -> dict:
     }
 
 
-def bench_table2(npts: int = 40_000):
+def bench_table2(npts: int = 40_000, lam2s=(0.05, 0.1, 0.15, 0.2, 0.25, 0.3)):
     """Optimal (d,s,m) vs (lambda2, t2) at n=10, lambda1=.6, t1=1.5."""
     rows = {}
-    for lam2 in (0.05, 0.1, 0.15, 0.2, 0.25, 0.3):
+    for lam2 in lam2s:
         row = []
         for t2 in (1.5, 3, 6, 12, 24, 48, 96):
             p = RuntimeParams(10, 0.6, lam2, 1.5, t2)
@@ -52,10 +58,10 @@ def bench_table2(npts: int = 40_000):
     return rows
 
 
-def bench_table3(npts: int = 40_000):
+def bench_table3(npts: int = 40_000, lam1s=(0.5, 0.6, 0.7, 0.8, 0.9, 1.0)):
     """Optimal (d,s,m) vs (lambda1, t1) at n=10, lambda2=.1, t2=6."""
     rows = {}
-    for lam1 in (0.5, 0.6, 0.7, 0.8, 0.9, 1.0):
+    for lam1 in lam1s:
         row = []
         for t1 in (1, 1.3, 1.6, 1.9, 2.2, 2.5, 2.8):
             p = RuntimeParams(10, lam1, 0.1, t1, 6.0)
@@ -65,29 +71,73 @@ def bench_table3(npts: int = 40_000):
     return rows
 
 
-def run() -> list[str]:
-    out = []
-    r1 = bench_table1()
-    ok = all(v[2] for v in r1["checks"].values())
-    out.append(f"runtime_table1_n8,checks_pass={ok},"
-               f"optimal={r1['optimal'][0]}@{r1['optimal'][1]},"
-               f"uncoded={r1['uncoded']},best_m1={r1['best_m1'][1]},"
-               f"win_vs_uncoded={r1['win_vs_uncoded']:.1%},"
-               f"win_vs_m1={r1['win_vs_m1']:.1%}")
+PAPER_T2_ROW1 = [(10, 9, 1), (10, 8, 2), (10, 8, 2), (10, 7, 3),
+                 (10, 6, 4), (10, 5, 5), (10, 4, 6)]
+PAPER_T3_ROW1 = [(10, 8, 2), (10, 8, 2), (3, 1, 2), (3, 1, 2), (3, 1, 2),
+                 (2, 0, 2), (2, 0, 2)]
+
+
+def bench_results(quick: bool = False) -> list[BenchResult]:
+    npts1 = 60_000 if quick else 200_000
+    npts23 = 10_000 if quick else 40_000
+    r1 = bench_table1(npts1)
+    checks_pass = all(v[2] for v in r1["checks"].values())
+    t2 = bench_table2(npts23, lam2s=(0.05, 0.2) if quick else
+                      (0.05, 0.1, 0.15, 0.2, 0.25, 0.3))
+    t3 = bench_table3(npts23, lam1s=(0.5,) if quick else
+                      (0.5, 0.6, 0.7, 0.8, 0.9, 1.0))
+    lines = [
+        f"runtime_table1_n8,checks_pass={checks_pass},"
+        f"optimal={r1['optimal'][0]}@{r1['optimal'][1]},"
+        f"uncoded={r1['uncoded']},best_m1={r1['best_m1'][1]},"
+        f"win_vs_uncoded={r1['win_vs_uncoded']:.1%},"
+        f"win_vs_m1={r1['win_vs_m1']:.1%}",
+    ]
     for k, (got, want, passed) in r1["checks"].items():
-        out.append(f"runtime_table1_entry,{k},got={got},paper={want},ok={passed}")
-    t2 = bench_table2()
-    paper_t2_row1 = [(10, 9, 1), (10, 8, 2), (10, 8, 2), (10, 7, 3),
-                     (10, 6, 4), (10, 5, 5), (10, 4, 6)]
-    out.append(f"runtime_table2_lam2=0.05,got={t2[0.05]},paper={paper_t2_row1},"
-               f"match={t2[0.05] == paper_t2_row1}")
-    out.append(f"runtime_table2_lam2=0.2,got={t2[0.2]}")
-    t3 = bench_table3()
-    paper_t3_row1 = [(10, 8, 2), (10, 8, 2), (3, 1, 2), (3, 1, 2), (3, 1, 2),
-                     (2, 0, 2), (2, 0, 2)]
-    out.append(f"runtime_table3_lam1=0.5,got={t3[0.5]},paper={paper_t3_row1},"
-               f"match={t3[0.5] == paper_t3_row1}")
-    return out
+        lines.append(f"runtime_table1_entry,{k},got={got},paper={want},ok={passed}")
+    lines.append(f"runtime_table2_lam2=0.05,got={t2[0.05]},paper={PAPER_T2_ROW1},"
+                 f"match={t2[0.05] == PAPER_T2_ROW1}")
+    lines.append(f"runtime_table3_lam1=0.5,got={t3[0.5]},paper={PAPER_T3_ROW1},"
+                 f"match={t3[0.5] == PAPER_T3_ROW1}")
+    (opt_d, opt_s, opt_m), opt_v = r1["optimal"]
+    result = BenchResult(
+        name="runtime_model_table1",
+        metrics={
+            "checks_pass": float(checks_pass),
+            "win_vs_uncoded": float(r1["win_vs_uncoded"]),
+            "win_vs_m1": float(r1["win_vs_m1"]),
+            "optimal_expected_runtime": float(opt_v),
+            "uncoded_expected_runtime": float(r1["uncoded"]),
+            "best_m1_expected_runtime": float(r1["best_m1"][1]),
+            "optimal_d": float(opt_d),
+            "optimal_s": float(opt_s),
+            "optimal_m": float(opt_m),
+            "table2_row1_match": float(t2[0.05] == PAPER_T2_ROW1),
+            "table3_row1_match": float(t3[0.5] == PAPER_T3_ROW1),
+        },
+        params={"n": 8, "lambda1": 0.8, "lambda2": 0.1, "t1": 1.6, "t2": 6.0,
+                "npts_table1": npts1, "npts_tables23": npts23, "quick": quick},
+        env=capture_env(),
+        gates={"checks_pass": "max", "win_vs_uncoded": "max",
+               "win_vs_m1": "max", "table2_row1_match": "max",
+               "table3_row1_match": "max"},
+        extra={"lines": lines, "table": r1["table"],
+               "table2": {str(k): v for k, v in t2.items()},
+               "table3": {str(k): v for k, v in t3.items()}},
+    )
+    return [result]
+
+
+register(BenchSpec(
+    name="table1",
+    description="Sec VI-A tables (n=8 table + 2-3)",
+    fn=bench_results,
+    tags=("model",),
+))
+
+
+def run() -> list[str]:
+    return bench_results(False)[0].extra["lines"]
 
 
 if __name__ == "__main__":

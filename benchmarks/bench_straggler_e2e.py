@@ -1,0 +1,219 @@
+"""End-to-end straggler-injection bench on the *real* jitted coded train step.
+
+Closes the loop between `repro.core.runtime_model` (Sec VI analytic model)
+and measured JAX execution: the three Fig-3 schemes — uncoded (psum
+all-reduce, wait for all n), best m=1 (cyclic/Tandon et al.), and best m>1
+(this paper) — run as actual `make_coded_train_step` executables on a
+simulated multi-device mesh (n data workers of host devices), while
+per-iteration delay/dropout patterns are drawn from the shifted-exponential
+model (`repro.bench.straggler`): the s slowest workers of each draw are
+dropped via the step's `W`/`mask`/`rho` inputs (one executable serves every
+pattern).
+
+Per iteration, total time = modeled cluster wait (the `(n-s)`-th order
+statistic the single host cannot exhibit) + measured wall-clock of the jitted
+step (the real encode/collective/decode/update work, including the d-fold
+compute redundancy).  The bench reports the m>1 speedup on that total, the
+measured-only schedule x backend grid for the m>1 scheme ({gather, a2a, psum}
+x {ref, pallas}), each schedule's predicted wire volume
+(`Schedule.recv_elems_per_worker`), and the analytic-vs-Monte-Carlo
+cross-check of E[T_tot].
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.bench import (
+    BenchResult,
+    BenchSpec,
+    capture_env,
+    draw_patterns,
+    mean_wait_s,
+    register,
+    time_sequence,
+)
+from repro.configs import get_config
+from repro.core import make_code
+from repro.core.runtime_model import (
+    RuntimeParams,
+    expected_total_runtime,
+    optimal_triple,
+)
+from repro.data import CodedBatcher, make_synthetic_batch
+from repro.launch.mesh import make_local_mesh
+from repro.models import api as model_api
+from repro.optim import get_optimizer
+from repro.train.coded_step import make_coded_train_step
+
+N_WORKERS = 4
+# same comm-heavy Sec-V calibration as bench_fig3_sim; at n=4 the model's
+# optima are (4,3,1) for the m=1 family and (4,2,2) for m>1
+CALIB = dict(lambda1=0.5, lambda2=0.2, t1=0.5, t2=16.0)
+
+
+def best_triple_m_gt1(params: RuntimeParams, npts: int) -> tuple[int, int, int]:
+    """argmin over the s = d - m frontier restricted to m >= 2."""
+    best, best_v = None, float("inf")
+    for d in range(2, params.n + 1):
+        for m in range(2, d + 1):
+            v = expected_total_runtime(params, d, d - m, m, npts)
+            if v < best_v:
+                best, best_v = (d, d - m, m), v
+    assert best is not None
+    return best
+
+
+def _measure_scheme(cfg, code, schedule, backend, patterns, batch, params_init):
+    """Mean measured wall-clock (s) of the jitted step across the patterns."""
+    mesh = make_local_mesh(N_WORKERS, 1)
+    opt = get_optimizer("sgd", 1e-2)
+    arts = make_coded_train_step(cfg, code, mesh, opt, schedule=schedule,
+                                 backend=backend)
+    placed = jax.tree.map(jnp.asarray, CodedBatcher(code).place(batch))
+    fn = arts.compiled(placed)
+    opt_state = opt.init(params_init)
+    inputs = [arts.step_inputs(p.stragglers) for p in patterns]
+    thunks = [
+        lambda inp=inp: fn(params_init, opt_state, placed,
+                           inp["W"], inp["mask"], inp["rho"])
+        for inp in inputs
+    ]
+    times = time_sequence(thunks, warmup=thunks[0])
+    return float(np.mean(times))
+
+
+def bench_results(quick: bool = False) -> list[BenchResult]:
+    d_model = 1024 if quick else 65536
+    global_batch = 16
+    iters = 4 if quick else 8
+    npts = 10_000 if quick else 30_000
+    grid_schedules = ("gather",) if quick else ("gather", "a2a")
+    grid_backends = ("ref",) if quick else ("ref", "pallas")
+
+    params = RuntimeParams(n=N_WORKERS, **CALIB)
+    triple_m1, _ = optimal_triple(params, npts=npts, restrict_m1=True)
+    triple_ours = best_triple_m_gt1(params, npts)
+    schemes = {
+        "uncoded": ((1, 0, 1), "psum"),
+        "m1": (triple_m1, "gather"),
+        "ours": (triple_ours, "gather"),
+    }
+
+    cfg = dataclasses.replace(get_config("logistic-paper"), d_model=d_model)
+    rng = np.random.default_rng(0)
+    batch = make_synthetic_batch(rng, cfg, global_batch, 0)
+    params_init = model_api.init(jax.random.PRNGKey(0), cfg)
+    l = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params_init))
+
+    metrics: dict[str, float] = {}
+    lines = []
+    totals = {}
+    seeds = {"uncoded": 11, "m1": 12, "ours": 13}
+    sim_iters = 2000  # large pure-sim sample for the analytic cross-check
+    for name, ((d, s, m), schedule) in schemes.items():
+        code = make_code(N_WORKERS, d, s, m)
+        patterns = draw_patterns(params, d, s, m, iters, seed=seeds[name])
+        measured = _measure_scheme(cfg, code, schedule, "ref", patterns,
+                                   batch, params_init)
+        modeled = mean_wait_s(patterns)
+        # per-worker times include the d*t1 + t2/m constants, so the mean
+        # wait is directly comparable to the analytic E[T_tot]
+        totals[name] = modeled + measured
+        analytic = expected_total_runtime(params, d, s, m, npts)
+        sim_mean = mean_wait_s(
+            draw_patterns(params, d, s, m, sim_iters, seed=seeds[name] + 100))
+        rel_err = abs(analytic - sim_mean) / analytic
+        metrics[f"measured_step_s_{name}"] = round(measured, 5)
+        metrics[f"modeled_wait_s_{name}"] = round(modeled, 4)
+        metrics[f"total_s_{name}"] = round(totals[name], 4)
+        metrics[f"model_vs_sim_rel_err_{name}"] = round(rel_err, 4)
+        metrics[f"model_matches_sim_{name}"] = float(rel_err < 0.05)
+        lines.append(
+            f"straggler_e2e,scheme={name},triple=({d},{s},{m}),"
+            f"schedule={schedule},measured_step_s={measured:.5f},"
+            f"modeled_wait_s={modeled:.3f},total_s={totals[name]:.3f},"
+            f"analytic_E={analytic:.3f},model_vs_sim_rel_err={rel_err:.3f}")
+
+    metrics["speedup_total_ours_vs_uncoded"] = round(
+        totals["uncoded"] / totals["ours"], 4)
+    metrics["speedup_total_ours_vs_m1"] = round(totals["m1"] / totals["ours"], 4)
+    lines.append(
+        f"straggler_e2e_summary,"
+        f"speedup_ours_vs_uncoded={metrics['speedup_total_ours_vs_uncoded']:.2f}x,"
+        f"speedup_ours_vs_m1={metrics['speedup_total_ours_vs_m1']:.2f}x")
+
+    # measured-only schedule x backend grid for the m>1 scheme, with each
+    # schedule's predicted wire volume next to it
+    d, s, m = triple_ours
+    code = make_code(N_WORKERS, d, s, m)
+    patterns = draw_patterns(params, d, s, m, iters, seed=7)
+    from repro.coding import get_schedule
+
+    grid_rows = []
+    for schedule in grid_schedules:
+        pred_elems = get_schedule(schedule).recv_elems_per_worker(
+            l, N_WORKERS, m)
+        for backend in grid_backends:
+            measured = _measure_scheme(cfg, code, schedule, backend, patterns,
+                                       batch, params_init)
+            metrics[f"grid_measured_s_{schedule}_{backend}"] = round(measured, 5)
+            grid_rows.append({"schedule": schedule, "backend": backend,
+                              "measured_s": measured,
+                              "predicted_recv_elems": pred_elems})
+            lines.append(f"straggler_e2e_grid,schedule={schedule},"
+                         f"backend={backend},measured_step_s={measured:.5f},"
+                         f"predicted_recv_elems_per_worker={pred_elems:.0f}")
+    # psum row: same (d,s,m) code — the rho-weighted all-reduce path with the
+    # same d-fold subset compute, so the grid isolates the collective cost
+    pred_psum = get_schedule("psum").recv_elems_per_worker(l, N_WORKERS, m)
+    measured_psum = _measure_scheme(cfg, code, "psum", "ref", patterns,
+                                    batch, params_init)
+    metrics["grid_measured_s_psum_ref"] = round(measured_psum, 5)
+    grid_rows.append({"schedule": "psum", "backend": "ref",
+                      "measured_s": measured_psum,
+                      "predicted_recv_elems": pred_psum})
+    lines.append(f"straggler_e2e_grid,schedule=psum,backend=ref,"
+                 f"measured_step_s={measured_psum:.5f},"
+                 f"predicted_recv_elems_per_worker={pred_psum:.0f}")
+
+    result = BenchResult(
+        name="straggler_e2e",
+        metrics=metrics,
+        params={"n_workers": N_WORKERS, "d_model": d_model,
+                "global_batch": global_batch, "iters": iters,
+                "l_params": l, "triple_m1": list(triple_m1),
+                "triple_ours": list(triple_ours), "quick": quick, **CALIB},
+        env=capture_env(mesh=make_local_mesh(N_WORKERS, 1)),
+        timing={"warmup": 1, "reps": iters,
+                "policy": "one timed sample per drawn straggler pattern"},
+        gates={"speedup_total_ours_vs_uncoded": "max",
+               "speedup_total_ours_vs_m1": "max",
+               "model_matches_sim_ours": "max"},
+        extra={"lines": lines, "grid": grid_rows},
+    )
+    return [result]
+
+
+register(BenchSpec(
+    name="straggler",
+    description="end-to-end straggler injection on the jitted coded step",
+    fn=bench_results,
+    tags=("e2e", "train"),
+))
+
+
+def run() -> list[str]:
+    return bench_results(False)[0].extra["lines"]
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

@@ -2,6 +2,15 @@
 results/dryrun/*.json.  Printed to stdout; EXPERIMENTS.md embeds the output.
 
   PYTHONPATH=src python -m benchmarks.report [--mesh single]
+
+The dry-run artifacts are NOT checked in (only the training-curve record
+`results/train_lm_coded.json` is).  Regenerate them locally first:
+
+  PYTHONPATH=src python -m repro.launch.dryrun            # full sweep
+  PYTHONPATH=src python -m repro.launch.dryrun --help     # subsets
+
+See EXPERIMENTS.md §Regenerating dry-run artifacts.  With no artifacts this
+tool prints that instruction and exits 0 (empty tables are not an error).
 """
 from __future__ import annotations
 
@@ -66,6 +75,13 @@ def main() -> None:
     ap.add_argument("--schedule", default=None)
     ap.add_argument("--tag", default="")
     args = ap.parse_args()
+    if not RESULTS.is_dir() or not any(RESULTS.glob("*.json")):
+        print(f"No dry-run artifacts under {RESULTS}.")
+        print("Regenerate them with:")
+        print("  PYTHONPATH=src python -m repro.launch.dryrun")
+        print("then re-run this report.  (See EXPERIMENTS.md §Regenerating "
+              "dry-run artifacts.)")
+        return
     recs = load_records(args.mesh, args.schedule, args.tag)
     print("### Dry-run table\n")
     print(dryrun_table(recs))

@@ -18,8 +18,11 @@ here, as do the 2 FLOPs/MAC convention and attention/backward bookkeeping).
 from __future__ import annotations
 
 import json
+import math
 import pathlib
 from typing import Iterable
+
+from repro.bench import BenchResult, BenchSpec, capture_env, register
 
 PEAK_FLOPS = 197e12       # bf16 / chip (v5e)
 HBM_BW = 819e9            # bytes/s / chip
@@ -124,8 +127,7 @@ def table(rows: Iterable[dict]) -> str:
     return "\n".join(lines)
 
 
-def run() -> list[str]:
-    rows = load_all()
+def _lines(rows: list[dict]) -> list[str]:
     if not rows:
         return ["roofline,no_dryrun_results_found_run_repro.launch.dryrun_first"]
     out = []
@@ -137,6 +139,45 @@ def run() -> list[str]:
             f"collective={r['collective_s']:.3e},dominant={r['dominant']},"
             f"useful={r['useful_ratio']:.3f}")
     return out
+
+
+def run() -> list[str]:
+    return _lines(load_all())
+
+
+def bench_results(quick: bool = False):
+    """Roofline terms as a structured result.  Dry-run artifacts are not
+    produced in CI (compiling the zoo takes too long for the smoke job), so
+    an empty `results/dryrun/` yields a valid record with n_records=0 and a
+    regeneration hint — see EXPERIMENTS.md §Regenerating dry-run artifacts."""
+    rows = load_all()
+    metrics: dict[str, float] = {"n_records": float(len(rows))}
+    for r in rows:
+        key = f"{r['arch']}_{r['shape']}_{r['mesh']}"
+        ratio = float(r["useful_ratio"])
+        if math.isfinite(ratio):
+            metrics[f"useful_ratio_{key}"] = round(ratio, 4)
+    return [BenchResult(
+        name="roofline",
+        metrics=metrics,
+        params={"results_dir": str(RESULTS), "quick": quick},
+        env=capture_env(),
+        gates={},
+        extra={
+            "lines": _lines(rows),
+            "rows": rows,
+            "regenerate": "PYTHONPATH=src python -m repro.launch.dryrun "
+                          "(see EXPERIMENTS.md)",
+        },
+    )]
+
+
+register(BenchSpec(
+    name="roofline",
+    description="roofline terms from dry-run artifacts",
+    fn=bench_results,
+    tags=("analysis",),
+))
 
 
 if __name__ == "__main__":

@@ -11,7 +11,6 @@ import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
-import numpy as np  # noqa: E402
 
 from repro.compat import NATIVE_SHARD_MAP  # noqa: E402
 from repro.configs import get_config  # noqa: E402

@@ -1,0 +1,46 @@
+"""`repro.bench`: the benchmark harness.
+
+Structured, reproducible, regression-gated measurements:
+
+  result   — `BenchResult` + schema validation + `BENCH_*.json` I/O
+  timing   — deterministic warmup/rep wall-clock policy (`TimerPolicy`)
+  env      — jax/backend/device/mesh environment capture
+  registry — discoverable `BenchSpec`s driven by `benchmarks/run.py`
+  straggler— Sec-VI shifted-exponential delay/dropout pattern injection
+  gate     — CI regression gate vs `benchmarks/baseline.json`
+
+See EXPERIMENTS.md for the harness guide and the CI gating contract.
+"""
+
+from .env import capture_env
+from .registry import BenchSpec, all_specs, get_spec, names, register
+from .result import (
+    SCHEMA_VERSION,
+    BenchResult,
+    load_results,
+    validate_result,
+    write_results,
+)
+from .straggler import StragglerPattern, draw_patterns, mean_wait_s
+from .timing import TimerPolicy, TimingStats, time_callable, time_sequence
+
+__all__ = [
+    "SCHEMA_VERSION",
+    "BenchResult",
+    "BenchSpec",
+    "StragglerPattern",
+    "TimerPolicy",
+    "TimingStats",
+    "all_specs",
+    "capture_env",
+    "draw_patterns",
+    "get_spec",
+    "load_results",
+    "mean_wait_s",
+    "names",
+    "register",
+    "time_callable",
+    "time_sequence",
+    "validate_result",
+    "write_results",
+]

@@ -1,0 +1,62 @@
+"""Straggler injection from the Section-VI shifted-exponential model.
+
+Draws per-worker delay/dropout patterns for the end-to-end bench: worker `i`
+finishes its `(d, s, m)` round after
+
+    X_i = d * (t1 + Exp(lambda1)) + (t2 + Exp(lambda2)) / m
+
+and the master proceeds once the fastest `n - s` workers are in.  A draw
+therefore yields both the modeled cluster wait (the `(n-s)`-th order
+statistic, matching `repro.core.runtime_model.simulate_runtimes`) and the
+concrete dropout set (the `s` slowest workers) to feed the jitted step's
+`W`/`mask`/`rho` inputs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.runtime_model import RuntimeParams
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerPattern:
+    """One iteration's injected delays and the induced dropout set."""
+
+    worker_times: np.ndarray  # (n,) modeled per-worker finish times
+    stragglers: tuple[int, ...]  # indices of the s slowest (dropped) workers
+    wait_s: float  # modeled master wait: (n-s)-th order statistic
+
+
+def draw_patterns(
+    params: RuntimeParams,
+    d: int,
+    s: int,
+    m: int,
+    iters: int,
+    seed: int = 0,
+) -> list[StragglerPattern]:
+    """`iters` i.i.d. delay/dropout patterns for an `(n, d, s, m)` scheme."""
+    rng = np.random.default_rng(seed)
+    n = params.n
+    comp = d * (params.t1 + rng.exponential(1.0 / params.lambda1, (iters, n)))
+    comm = (params.t2 + rng.exponential(1.0 / params.lambda2, (iters, n))) / m
+    times = comp + comm
+    out = []
+    for t in times:
+        order = np.argsort(t)
+        slow = tuple(int(i) for i in order[n - s :]) if s else ()
+        out.append(
+            StragglerPattern(
+                worker_times=t,
+                stragglers=slow,
+                wait_s=float(t[order[n - s - 1]]),
+            )
+        )
+    return out
+
+
+def mean_wait_s(patterns: list[StragglerPattern]) -> float:
+    return float(np.mean([p.wait_s for p in patterns]))

@@ -1,0 +1,93 @@
+"""Deterministic wall-clock timing for jitted callables.
+
+Policy is explicit and fixed (no adaptive rep counts): `warmup` untimed calls
+(compilation + cache effects), then `reps` timed calls, each synchronized with
+`jax.block_until_ready` so device work is actually on the clock.  The same
+policy object is recorded into `BenchResult.timing` so two JSON files are
+comparable at a glance.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Any, Callable
+
+
+@dataclasses.dataclass(frozen=True)
+class TimerPolicy:
+    """Fixed warmup/repetition policy (deterministic across runs)."""
+
+    warmup: int = 1
+    reps: int = 10
+
+
+@dataclasses.dataclass(frozen=True)
+class TimingStats:
+    """Per-call wall-clock statistics in seconds."""
+
+    mean_s: float
+    min_s: float
+    max_s: float
+    std_s: float
+    reps: int
+    warmup: int
+
+    def to_dict(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def _sync(out: Any) -> None:
+    try:
+        import jax
+
+        jax.block_until_ready(out)
+    except ImportError:  # pragma: no cover - jax is a hard dep of the repo
+        pass
+
+
+def time_callable(
+    fn: Callable[..., Any],
+    *args: Any,
+    policy: TimerPolicy = TimerPolicy(),
+    sync: Callable[[Any], None] = _sync,
+) -> TimingStats:
+    """Time `fn(*args)` under `policy`, synchronizing each call via `sync`."""
+    for _ in range(policy.warmup):
+        sync(fn(*args))
+    samples = []
+    for _ in range(policy.reps):
+        t0 = time.perf_counter()
+        sync(fn(*args))
+        samples.append(time.perf_counter() - t0)
+    return TimingStats(
+        mean_s=statistics.fmean(samples),
+        min_s=min(samples),
+        max_s=max(samples),
+        std_s=statistics.pstdev(samples) if len(samples) > 1 else 0.0,
+        reps=policy.reps,
+        warmup=policy.warmup,
+    )
+
+
+def time_sequence(
+    fns: list[Callable[[], Any]],
+    *,
+    warmup: Callable[[], Any] | None = None,
+    sync: Callable[[Any], None] = _sync,
+) -> list[float]:
+    """Time a heterogeneous sequence of thunks (one sample each).
+
+    Used by the straggler bench where every iteration runs with a *different*
+    input pattern: `warmup` (typically the first pattern) is called untimed to
+    absorb compilation, then each thunk is timed once.
+    """
+    if warmup is not None:
+        sync(warmup())
+    out = []
+    for fn in fns:
+        t0 = time.perf_counter()
+        sync(fn())
+        out.append(time.perf_counter() - t0)
+    return out

@@ -47,6 +47,13 @@ class Schedule:
         (beyond m): 1 unless the schedule slices encodings n ways."""
         return 1
 
+    def recv_elems_per_worker(self, l: int, n: int, m: int) -> float:
+        """Wire-cost model: elements *received* per worker to aggregate one
+        l-element gradient (multiply by the wire itemsize for bytes).  Used
+        by the straggler bench to report predicted collective volume next to
+        measured wall-clock."""
+        raise NotImplementedError
+
     def decode_leaf(self, f_leaf: jax.Array, W: jax.Array, plan: LeafPlan,
                     axis_names, n: int, backend: CodecBackend, *,
                     W_row: jax.Array | None = None,
@@ -73,6 +80,10 @@ class GatherSchedule(Schedule):
     """Paper-faithful master emulation: all_gather encodings, decode locally."""
     name: str = "gather"
 
+    def recv_elems_per_worker(self, l: int, n: int, m: int) -> float:
+        # all_gather of the (l/m)-element encodings: n-1 peer encodings in
+        return (n - 1) * l / m
+
     def decode_leaf(self, f_leaf, W, plan, axis_names, n, backend, *,
                     W_row=None, emulate=False):
         if emulate:
@@ -91,6 +102,10 @@ class AllToAllSchedule(Schedule):
 
     def n_split(self, n: int) -> int:
         return n
+
+    def recv_elems_per_worker(self, l: int, n: int, m: int) -> float:
+        # all_to_all of the l/m encoding + all_gather of decoded l/n slices
+        return (n - 1) * l / (m * n) + (n - 1) * l / n
 
     def decode_leaf(self, f_leaf, W, plan, axis_names, n, backend, *,
                     W_row=None, emulate=False):
@@ -116,6 +131,10 @@ class PsumSchedule(Schedule):
     """Uncoded baseline: rho-weighted all-reduce, no encode/decode."""
     name: str = "psum"
     uses_encoding: bool = False
+
+    def recv_elems_per_worker(self, l: int, n: int, m: int) -> float:
+        # ring all-reduce: reduce-scatter + all-gather phases, ~2l in total
+        return 2 * (n - 1) * l / n
 
     def decode_leaf(self, f_leaf, W, plan, axis_names, n, backend, *,
                     W_row=None, emulate=False):

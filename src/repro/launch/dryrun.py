@@ -23,8 +23,6 @@ import pathlib       # noqa: E402
 import time          # noqa: E402
 import traceback     # noqa: E402
 
-import jax           # noqa: E402
-
 from repro.compat import set_mesh                   # noqa: E402
 from repro.configs import ARCHS                     # noqa: E402
 from repro.launch import lowering                   # noqa: E402

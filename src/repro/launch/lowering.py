@@ -7,12 +7,10 @@ for §Roofline.  No arrays are ever allocated.
 from __future__ import annotations
 
 import dataclasses
-import re
 from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config
@@ -20,10 +18,9 @@ from repro.core import make_code
 from repro.models import api as model_api
 from repro.optim import get_optimizer
 from repro.serving.engine import build_serve_artifacts
-from repro.train import sharding
 from repro.train.coded_step import make_coded_train_step
 
-from .mesh import data_axes_of, data_degree
+from .mesh import data_degree
 from .shapes import SHAPES, applicability
 
 PyTree = Any

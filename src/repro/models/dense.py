@@ -107,7 +107,6 @@ def decode_step(params, cfg, cache, token, *, window: int = 0):
     """One decode step.  token: (B,) int32; cache from cache_spec/prefill.
     Returns (logits (B, V), new cache).  ``cache["pos"]`` is the absolute
     position of the token being written."""
-    B = token.shape[0]
     pos = cache["pos"]
     x = cm.embed_tokens(params["embed"], token[:, None], cm.cdtype(cfg))
 

@@ -219,7 +219,6 @@ def prefill(params, cfg, tokens, cache_len: int, *, window: int = 0):
 
 
 def decode_step(params, cfg, cache, token, *, window: int = 0):
-    B = token.shape[0]
     pos = cache["pos"]
     x = cm.embed_tokens(params["embed"], token[:, None], cm.cdtype(cfg))
 

@@ -108,7 +108,10 @@ def mlstm_chunked(lp, cfg, xi, state):
     while T % cl:
         cl -= 1
     nc = T // cl
-    r = lambda x: jnp.moveaxis(x.reshape(B, nc, cl, *x.shape[2:]), 1, 0)
+
+    def r(x):
+        return jnp.moveaxis(x.reshape(B, nc, cl, *x.shape[2:]), 1, 0)
+
     qs, ks, vs = r(q.astype(jnp.float32) / np.sqrt(hd)), r(k.astype(jnp.float32)), \
         r(v.astype(jnp.float32))
     is_, fs = r(i), r(f)

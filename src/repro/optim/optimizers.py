@@ -77,7 +77,8 @@ def sgd_momentum(lr: float, momentum: float = 0.9) -> Optimizer:
 def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
           weight_decay: float = 0.0) -> Optimizer:
     def init(params):
-        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        def z(p):
+            return jnp.zeros_like(p, jnp.float32)
         return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params),
                 "t": jnp.zeros((), jnp.int32)}
 

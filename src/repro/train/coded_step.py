@@ -60,6 +60,27 @@ class StepArtifacts:
     coded_fraction: float
     codec: coding.Codec | None = None
 
+    # ---- benchmark / driver hooks --------------------------------------
+    def compiled(self, batch):
+        """Jit the step for a batch (arrays or ShapeDtypeStructs).
+
+        Collapses the `arts.step(shapes) -> jax.jit(fn)` dance every driver
+        repeats; straggler patterns stay *inputs* to the returned callable
+        (`fn(params, opt_state, batch, W, mask, rho)`), so one executable
+        serves every drop pattern.
+        """
+        shapes = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), batch)
+        fn, _, _ = self.step(shapes)
+        return jax.jit(fn)
+
+    def step_inputs(self, stragglers=()) -> dict[str, jax.Array]:
+        """Drop-pattern hook: device-ready `W`/`mask`/`rho` for a straggler
+        set (the host-side float64 solve for this responder pattern)."""
+        assert self.codec is not None
+        inp = coding.make_step_inputs(self.codec.code, stragglers)
+        return {k: jnp.asarray(v) for k, v in inp.items()}
+
 
 def _data_axes(mesh) -> tuple[str, ...]:
     return tuple(a for a in mesh.axis_names if a != "model")
@@ -134,7 +155,7 @@ def make_coded_train_step(cfg, code: GradCode, mesh, optimizer: Optimizer,
         if not pl.coded:
             return None
         entries = [e if e == "model" else None for e in tuple(spec)]
-        g = entries.pop(pl.group_dim)
+        del entries[pl.group_dim]
         return P(*([None] + entries))
 
     enc_specs = jax.tree.map(

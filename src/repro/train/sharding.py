@@ -37,7 +37,9 @@ def _rule(names: list[str], shape: tuple[int, ...], ms: int, ax: str):
     name = names[-1]
     parent = names[-2] if len(names) >= 2 else ""
     nd = len(shape)
-    ok = lambda d: shape[d] % ms == 0 and shape[d] >= ms
+
+    def ok(d):
+        return shape[d] % ms == 0 and shape[d] >= ms
 
     def spec(*entries):
         return list(entries)

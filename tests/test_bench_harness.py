@@ -1,0 +1,107 @@
+"""Smoke tests of the `repro.bench` harness: every registered benchmark runs
+end-to-end at `--quick` sizes, emits schema-valid `BenchResult`s, and the
+written `BENCH_*.json` round-trips through the validator; the regression gate
+passes against itself and catches a doctored regression."""
+import json
+
+import pytest
+
+from repro.bench import (
+    BenchResult,
+    TimerPolicy,
+    load_results,
+    time_callable,
+    validate_result,
+    write_results,
+)
+from repro.bench.gate import check, collect_gated, write_baseline
+
+from benchmarks.run import _load_registry
+
+REGISTRY = _load_registry()
+
+# run each spec at most once per session even though several tests look at it
+_RESULTS_CACHE: dict[str, list] = {}
+
+
+def _results_for(name: str):
+    if name not in _RESULTS_CACHE:
+        _RESULTS_CACHE[name] = REGISTRY[name].fn(True)  # quick=True
+    return _RESULTS_CACHE[name]
+
+
+def test_registry_has_all_targets():
+    assert set(REGISTRY) == {"table1", "stability", "fig3", "auc",
+                             "throughput", "straggler", "roofline"}
+
+
+@pytest.mark.parametrize("name", sorted(
+    {"table1", "stability", "fig3", "auc", "throughput", "straggler",
+     "roofline"}))
+def test_quick_bench_runs_and_validates(name, tmp_path):
+    results = _results_for(name)
+    assert results, f"{name} emitted no results"
+    for r in results:
+        assert isinstance(r, BenchResult)
+        r.validate()
+    path = write_results(results, name, tmp_path)
+    assert path.name == f"BENCH_{name}.json"
+    loaded = load_results(path)  # validates every record again
+    assert [r["name"] for r in loaded] == [r.name for r in results]
+    payload = json.loads(path.read_text())
+    assert payload["schema_version"] == 1 and payload["bench"] == name
+
+
+def test_straggler_bench_reports_m_gt1_speedup():
+    """Acceptance: the e2e bench shows a measured m>1 win over uncoded (and
+    over the best m=1 scheme) on the simulated mesh."""
+    (r,) = _results_for("straggler")
+    assert r.metrics["speedup_total_ours_vs_uncoded"] > 1.0
+    assert r.metrics["speedup_total_ours_vs_m1"] > 1.0
+    # the Sec-VI analytic model matches the Monte-Carlo draws
+    assert r.metrics["model_matches_sim_ours"] == 1.0
+    # the grid measured the real jitted step (nonzero wall-clock)
+    assert r.metrics["measured_step_s_ours"] > 0.0
+
+
+def test_validator_rejects_bad_results():
+    good = BenchResult(name="x", metrics={"a": 1.0}, gates={"a": "max"})
+    assert validate_result(good.to_dict()) == []
+    bad = dict(good.to_dict(), metrics={"a": float("nan")})
+    assert any("finite" in e for e in validate_result(bad))
+    bad = dict(good.to_dict(), gates={"missing": "max"})
+    assert any("names no metric" in e for e in validate_result(bad))
+    bad = dict(good.to_dict(), schema_version=99)
+    assert any("schema_version" in e for e in validate_result(bad))
+
+
+def test_gate_roundtrip_and_regression(tmp_path):
+    r = BenchResult(
+        name="g", metrics={"speedup": 2.0, "raw_s": 0.5},
+        gates={"speedup": "max"},
+    )
+    write_results([r], "g", tmp_path / "out")
+    observed = collect_gated(tmp_path / "out")
+    assert observed == {"g": {"speedup": (2.0, "max")}}  # raw_s not gated
+    write_baseline(observed, tmp_path / "baseline.json")
+    baseline = json.loads((tmp_path / "baseline.json").read_text())
+    assert check(observed, baseline) == []
+    # within tolerance: 2.0 -> 1.7 at 20% passes; 2.0 -> 1.5 fails
+    assert check({"g": {"speedup": (1.7, "max")}}, baseline) == []
+    failures = check({"g": {"speedup": (1.5, "max")}}, baseline)
+    assert failures and "regressed" in failures[0]
+    # a gated result vanishing from the run also fails
+    assert check({}, baseline)
+    # a newly gated metric with no baseline entry fails until --update runs
+    failures = check({"g": {"speedup": (2.0, "max"), "extra": (1.0, "max")}},
+                     baseline)
+    assert any("no baseline entry" in f for f in failures)
+
+
+def test_timer_policy_deterministic_counts():
+    calls = []
+    stats = time_callable(lambda: calls.append(0),
+                          policy=TimerPolicy(warmup=2, reps=3),
+                          sync=lambda _: None)
+    assert len(calls) == 5 and stats.reps == 3 and stats.warmup == 2
+    assert stats.min_s <= stats.mean_s <= stats.max_s

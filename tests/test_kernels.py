@@ -1,6 +1,5 @@
 """Pallas kernel validation: interpret-mode execution swept over shapes and
 dtypes, asserted allclose against the pure-jnp oracle (ref.py)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

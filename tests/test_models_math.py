@@ -4,7 +4,6 @@ path; prefill+decode equals the training forward."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.models import api, common as cm, dense, mamba_hybrid, xlstm

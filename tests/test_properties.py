@@ -6,7 +6,7 @@ pytest.importorskip("hypothesis")  # declared in pyproject [test]; optional at r
 from hypothesis import given, settings, strategies as st
 
 from repro.core import GradCode, tradeoff
-from repro.core.coded_allreduce import LeafPlan, plan_leaf
+from repro.core.coded_allreduce import plan_leaf
 
 
 # ---------------------------------------------------------- valid-triple gen

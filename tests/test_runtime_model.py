@@ -1,7 +1,6 @@
 """Section VI runtime model: paper table reproduction + closed-form regimes."""
 import math
 
-import numpy as np
 import pytest
 
 from repro.core import runtime_model as rm
