@@ -80,6 +80,39 @@ def _bench_backend(name: str, quick: bool) -> BenchResult:
     )
 
 
+def _bench_fused_decode(quick: bool) -> BenchResult:
+    """The packed wire's compute-side claim, isolated from collectives: one
+    fused (n, K*V) decode contraction vs K skinny per-leaf (n, V) decodes at
+    identical total elements (K pallas_call/einsum launches vs one)."""
+    n, m = 4, 2
+    K, V = (8, 512) if quick else (64, 4096)
+    bk = resolve_backend("ref")
+    rng = np.random.default_rng(1)
+    leaves = [jnp.asarray(rng.standard_normal((n, V)), jnp.float32)
+              for _ in range(K)]
+    packed = jnp.concatenate(leaves, axis=1)               # (n, K*V)
+    W = jnp.asarray(rng.standard_normal((n, m)), jnp.float32)
+    per_leaf = jax.jit(lambda fs, Wm: [bk.decode(f, Wm) for f in fs])
+    fused = jax.jit(lambda F, Wm: bk.decode(F, Wm))
+    policy = TimerPolicy(warmup=2, reps=5 if quick else 20)
+    t_leaf = time_callable(per_leaf, leaves, W, policy=policy).mean_s * 1e6
+    t_fused = time_callable(fused, packed, W, policy=policy).mean_s * 1e6
+    speedup = t_leaf / t_fused
+    line = (f"fused_decode,K={K},V={V},per_leaf_us={t_leaf:.0f},"
+            f"fused_us={t_fused:.0f},speedup={speedup:.2f}x")
+    return BenchResult(
+        name="fused_decode",
+        metrics={"per_leaf_us": round(t_leaf, 1),
+                 "fused_us": round(t_fused, 1),
+                 "fused_speedup": round(speedup, 3)},
+        params={"n": n, "m": m, "K": K, "V": V, "quick": quick},
+        env=capture_env(),
+        timing={"warmup": policy.warmup, "reps": policy.reps},
+        gates={},   # wall-clock ratio: too hardware-dependent to gate
+        extra={"lines": [line]},
+    )
+
+
 def _bench_solve(quick: bool) -> BenchResult:
     metrics: dict[str, float] = {}
     lines = []
@@ -109,6 +142,7 @@ def bench_results(quick: bool = False,
     if quick:
         backends = ("ref",)
     out = [_bench_backend(name, quick) for name in backends]
+    out.append(_bench_fused_decode(quick))
     out.append(_bench_solve(quick))
     return out
 

@@ -71,21 +71,35 @@ def best_triple_m_gt1(params: RuntimeParams, npts: int) -> tuple[int, int, int]:
     return best
 
 
-def _measure_scheme(cfg, code, schedule, backend, patterns, batch, params_init):
-    """Mean measured wall-clock (s) of the jitted step across the patterns."""
+def _measure_scheme(cfg, code, schedule, backend, patterns, batch, params_init,
+                    packed: bool = True):
+    """Mean measured wall-clock (s) of the jitted step across the patterns.
+
+    The timing loop runs the steady-state training shape: params/opt_state
+    are donated (`compiled(..., donate=True)`, matching the Trainer's jit)
+    and each thunk threads the previous step's outputs into the next call.
+    """
     mesh = make_local_mesh(N_WORKERS, 1)
     opt = get_optimizer("sgd", 1e-2)
     arts = make_coded_train_step(cfg, code, mesh, opt, schedule=schedule,
-                                 backend=backend)
+                                 backend=backend, packed=packed)
     placed = jax.tree.map(jnp.asarray, CodedBatcher(code).place(batch))
-    fn = arts.compiled(placed)
-    opt_state = opt.init(params_init)
+    fn = arts.compiled(placed, donate=True)
+    # donation invalidates the argument buffers on real accelerators: work
+    # on a private copy so the shared params_init survives across schemes
+    params0 = jax.tree.map(jnp.array, params_init)
+    state = {"params": params0, "opt": opt.init(params0)}
     inputs = [arts.step_inputs(p.stragglers) for p in patterns]
-    thunks = [
-        lambda inp=inp: fn(params_init, opt_state, placed,
-                           inp["W"], inp["mask"], inp["rho"])
-        for inp in inputs
-    ]
+
+    def make_thunk(inp):
+        def thunk():
+            p2, o2, metrics = fn(state["params"], state["opt"], placed,
+                                 inp["W"], inp["mask"], inp["rho"])
+            state["params"], state["opt"] = p2, o2
+            return metrics
+        return thunk
+
+    thunks = [make_thunk(inp) for inp in inputs]
     times = time_sequence(thunks, warmup=thunks[0])
     return float(np.mean(times))
 
@@ -171,6 +185,17 @@ def bench_results(quick: bool = False) -> list[BenchResult]:
             lines.append(f"straggler_e2e_grid,schedule={schedule},"
                          f"backend={backend},measured_step_s={measured:.5f},"
                          f"predicted_recv_elems_per_worker={pred_elems:.0f}")
+    # per-leaf escape hatch next to the packed default (same code/schedule):
+    # isolates the per-collective launch overhead the packing removes
+    measured_pl = _measure_scheme(cfg, code, "gather", "ref", patterns,
+                                  batch, params_init, packed=False)
+    metrics["grid_measured_s_gather_ref_perleaf"] = round(measured_pl, 5)
+    grid_rows.append({"schedule": "gather", "backend": "ref",
+                      "packed": False, "measured_s": measured_pl,
+                      "predicted_recv_elems": get_schedule(
+                          "gather").recv_elems_per_worker(l, N_WORKERS, m)})
+    lines.append(f"straggler_e2e_grid,schedule=gather,backend=ref,"
+                 f"packed=False,measured_step_s={measured_pl:.5f}")
     # psum row: same (d,s,m) code — the rho-weighted all-reduce path with the
     # same d-fold subset compute, so the grid isolates the collective cost
     pred_psum = get_schedule("psum").recv_elems_per_worker(l, N_WORKERS, m)

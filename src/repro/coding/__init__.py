@@ -3,6 +3,7 @@
   plan     — per-leaf grouping-dimension choice (``plan.py``)
   encode   — fold subset gradients into l/m encodings (``codec.py``)
   wire     — wire-dtype collectives with the u16 bitcast trick (``wire.py``)
+  pack     — bucketed flat wire buffers, O(1) collectives/bucket (``packing.py``)
   decode   — gather / a2a / psum schedules (``schedules.py``)
   backends — ref einsum vs Pallas kernels, auto-dispatched (``backends.py``)
 
@@ -15,6 +16,9 @@ from .backends import (BACKEND_NAMES, CodecBackend, PallasBackend, RefBackend,
 from .codec import Codec, decode_tree, encode_leaf, encode_tree, make_codec
 from .inputs import coding_worker_index, make_step_inputs
 from .layout import groups_to_leaf, leaf_to_groups
+from .packing import (WIRE_ALIGN, LeafSlot, PackPlan, WireBucket, enc_shape,
+                      make_pack_plan, pack_bucket, psum_fallback,
+                      unpack_bucket)
 from .plan import LeafPlan, coded_fraction, plan_leaf, plan_tree
 from .schedules import (SCHEDULES, AllToAllSchedule, GatherSchedule,
                         PsumSchedule, Schedule, decode_leaf_a2a,
@@ -28,6 +32,9 @@ __all__ = [
     "Schedule", "GatherSchedule", "AllToAllSchedule", "PsumSchedule",
     "SCHEDULES", "get_schedule",
     "LeafPlan", "plan_leaf", "plan_tree", "coded_fraction",
+    "PackPlan", "WireBucket", "LeafSlot", "WIRE_ALIGN",
+    "make_pack_plan", "pack_bucket", "unpack_bucket", "psum_fallback",
+    "enc_shape",
     "encode_leaf", "encode_tree", "decode_tree",
     "decode_leaf_gather", "decode_leaf_a2a",
     "all_gather_wire", "all_to_all_wire",

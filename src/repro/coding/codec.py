@@ -6,7 +6,10 @@ A codec binds a gradient code to an aggregation ``Schedule`` and a compute
   plan    — choose each leaf's grouping dimension (``plan_tree``),
   encode  — fold one subset's gradient into the l/m encoding (eq. 17/18),
   wire    — mask stragglers + cast to the wire dtype (u16-bitcast collectives),
-  decode  — run the schedule's collective choreography + contraction (eq. 19-21).
+  pack    — lay every coded encoding into bucketed flat wire buffers
+            (``packing.py``; static ``PackPlan``, O(1) collectives/bucket),
+  decode  — run the schedule's collective choreography + contraction (eq. 19-21),
+  unpack  — static slices + ``groups_to_leaf`` back to leaf layouts.
 
 New code families (approximate codes, heterogeneous placements) plug in by
 constructing a codec around their ``GradCode``; the train step never changes.
@@ -24,6 +27,7 @@ if TYPE_CHECKING:  # annotation-only: keeps repro.coding import-independent
 
 from .backends import CodecBackend, RefBackend, resolve_backend
 from .layout import flatten_rest, leaf_to_groups, unflatten_rest
+from .packing import PackPlan, make_pack_plan, pack_bucket, unpack_bucket
 from .plan import LeafPlan, coded_fraction, plan_tree
 from .schedules import Schedule, get_schedule
 
@@ -118,6 +122,28 @@ class Codec:
         """Mask the straggler payload (transmits nothing) + cast to the wire."""
         return (e * mask_i).astype(jnp.dtype(self.wire_dtype))
 
+    # ---- pack / unpack
+    def pack_plan(self, tree: PyTree, plans: PyTree, *,
+                  specs: PyTree | None = None,
+                  model_size: int = 1) -> PackPlan:
+        """Static wire layout of every coded leaf (see ``packing.py``)."""
+        return make_pack_plan(tree, plans, m=self.code.m, n=self.code.n,
+                              specs=specs, model_size=model_size,
+                              wire_dtype=self.wire_dtype)
+
+    def pack(self, flat_leaves, pplan: PackPlan) -> list[jax.Array]:
+        """Flattened (tree-order) wire-masked leaves -> one flat buffer per
+        bucket."""
+        return [pack_bucket(flat_leaves, b, self.wire_dtype)
+                for b in pplan.buckets]
+
+    def unpack(self, decoded_bufs, pplan: PackPlan) -> dict[int, jax.Array]:
+        """Per-bucket (L, m) decoded buffers -> {leaf_index: gradient leaf}."""
+        out: dict[int, jax.Array] = {}
+        for dec, b in zip(decoded_bufs, pplan.buckets):
+            out.update(unpack_bucket(dec, b))
+        return out
+
     # ---- decode
     def decode_leaf(self, f_leaf: jax.Array, W: jax.Array, plan: LeafPlan,
                     axis_names, *, W_row: jax.Array | None = None,
@@ -125,6 +151,14 @@ class Codec:
         return self.schedule.decode_leaf(f_leaf, W, plan, axis_names,
                                          self.code.n, self.backend,
                                          W_row=W_row, emulate=emulate)
+
+    def decode_packed(self, buf: jax.Array, W: jax.Array, axis_names, *,
+                      W_row: jax.Array | None = None,
+                      emulate: bool = False) -> jax.Array:
+        """One bucket's collective + fused contraction: (L,) -> (L, m) f32."""
+        return self.schedule.decode_packed(buf, W, axis_names, self.code.n,
+                                           self.backend, W_row=W_row,
+                                           emulate=emulate)
 
 
 def make_codec(code: GradCode, *, schedule: str | Schedule = "gather",

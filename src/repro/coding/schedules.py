@@ -64,6 +64,18 @@ class Schedule:
         all_gather/all_to_all (see ``repro.compat.collectives_ok``)."""
         raise NotImplementedError
 
+    def decode_packed(self, buf: jax.Array, W: jax.Array, axis_names, n: int,
+                      backend: CodecBackend, *,
+                      W_row: jax.Array | None = None,
+                      emulate: bool = False) -> jax.Array:
+        """Decode one packed wire bucket: ``buf`` is the (L,) flat buffer of
+        concatenated leaf encodings (``repro.coding.packing``), L a multiple
+        of lcm(128, n).  Returns the (L, m) decoded groups in f32 — the same
+        per-element contraction as ``decode_leaf``, issued as ONE collective
+        choreography and one large aligned contraction for the whole bucket
+        instead of one per leaf."""
+        raise NotImplementedError
+
 
 def _decode_psum_emulated(f_leaf, W_row, plan, axis_names, backend):
     """Collective-free decode: every worker weights its own encoding by its W
@@ -73,6 +85,16 @@ def _decode_psum_emulated(f_leaf, W_row, plan, axis_names, backend):
     assert W_row is not None, "emulated decode needs this worker's W row"
     dec = _decode_stack(f_leaf[None], W_row[None], backend)  # (V, m, *rest)
     return groups_to_leaf(jax.lax.psum(dec, axis_names), plan)
+
+
+def _decode_packed_emulated(buf, W_row, axis_names, backend):
+    """Packed twin of ``_decode_psum_emulated``: contract the whole (L,)
+    bucket against this worker's W row, then one psum — the bucket's single
+    collective on the degraded (old-jax partial-auto) runtime."""
+    assert W_row is not None, "emulated decode needs this worker's W row"
+    dec = backend.decode(buf[None], W_row[None],
+                         out_dtype=jnp.float32)              # (L, m)
+    return jax.lax.psum(dec, axis_names)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,6 +113,13 @@ class GatherSchedule(Schedule):
                                          backend)
         gathered = wire.all_gather_wire(f_leaf, axis_names)  # (n, V, *rest)
         return groups_to_leaf(_decode_stack(gathered, W, backend), plan)
+
+    def decode_packed(self, buf, W, axis_names, n, backend, *,
+                      W_row=None, emulate=False):
+        if emulate:
+            return _decode_packed_emulated(buf, W_row, axis_names, backend)
+        gathered = wire.all_gather_wire(buf, axis_names)     # (n, L)
+        return backend.decode(gathered, W, out_dtype=jnp.float32)  # (L, m)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -124,6 +153,20 @@ class AllToAllSchedule(Schedule):
         full = full.astype(jnp.float32)                          # (n, c, m, *rest)
         full = full.reshape(v, *dec.shape[1:])                   # (v, m, *rest)
         return groups_to_leaf(full, plan)
+
+    def decode_packed(self, buf, W, axis_names, n, backend, *,
+                      W_row=None, emulate=False):
+        if emulate:
+            # same degradation as decode_leaf: no native all_to_all on the
+            # old-jax partial-auto runtime — fall back to the psum emulation
+            return _decode_packed_emulated(buf, W_row, axis_names, backend)
+        L = buf.shape[0]
+        assert L % n == 0, f"a2a needs n | bucket length, got {L} % {n}"
+        ex = wire.all_to_all_wire(buf, axis_names)           # (L,)
+        ex = ex.reshape(n, L // n)                           # row p: peer p
+        dec = backend.decode(ex, W, out_dtype=jnp.float32)   # (L/n, m)
+        full = wire.all_gather_wire(dec.astype(buf.dtype), axis_names)
+        return full.astype(jnp.float32).reshape(L, dec.shape[1])
 
 
 @dataclasses.dataclass(frozen=True)

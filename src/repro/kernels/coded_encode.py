@@ -26,9 +26,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+@functools.lru_cache(maxsize=None)
 def pick_tile(size: int, target: int, align: int) -> int:
     """Largest divisor of ``size`` that is <= target, preferring multiples of
-    ``align`` (VPU lane/sublane alignment); falls back to the largest divisor."""
+    ``align`` (VPU lane/sublane alignment); falls back to the largest divisor.
+
+    Memoized: this O(size) scan runs at Python trace time for every leaf
+    shape of every (re)trace — the zoo retraces the same handful of shapes
+    constantly, so the cache turns it into a dict hit."""
     best = 1
     for t in range(min(target, size), 0, -1):
         if size % t:

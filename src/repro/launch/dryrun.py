@@ -51,11 +51,18 @@ def run_one(arch: str, shape: str, mesh_name: str, schedule: str,
     if "enc_constraint" in opts:
         from repro.train import coded_step as _cs
         _cs.ENC_CONSTRAINT = True
+        # the lever pins per-leaf encoding shardings through the collective;
+        # the packed wire flattens leaves into flat buckets before the
+        # collective, so the constraint only measures anything on the
+        # per-leaf wire — imply it rather than record a misleading A/B
+        opts.add("per_leaf_wire")
     if SHAPES[shape].kind == "train":
         kw["schedule"] = schedule
         kw["backend"] = backend
         if "bf16_wire" in opts:
             kw["encode_dtype"] = "bfloat16"
+        if "per_leaf_wire" in opts:     # packed wire off: one collective/leaf
+            kw["packed"] = False
         if code_spec:
             d, s, m = (int(x) for x in code_spec.split(","))
             from repro.launch.mesh import data_degree

@@ -70,7 +70,7 @@ def build_train_lowering(arch: str, shape_name: str, mesh, *,
                          schedule: str = "gather", code=None,
                          optimizer: str = "adamw",
                          encode_dtype: str = "float32",
-                         backend: str = "auto"):
+                         backend: str = "auto", packed: bool = True):
     """Returns (jitted_fn, args) ready for .lower(*args)."""
     cfg = dryrun_config(arch)
     shape = SHAPES[shape_name]
@@ -78,7 +78,8 @@ def build_train_lowering(arch: str, shape_name: str, mesh, *,
     code = code or default_code(n)
     opt = get_optimizer(optimizer, 1e-3)
     arts = make_coded_train_step(cfg, code, mesh, opt, schedule=schedule,
-                                 encode_dtype=encode_dtype, backend=backend)
+                                 encode_dtype=encode_dtype, backend=backend,
+                                 packed=packed)
 
     pshapes = jax.eval_shape(lambda: model_api.init(jax.random.PRNGKey(0), cfg))
     oshapes = jax.eval_shape(opt.init, pshapes)
@@ -93,7 +94,9 @@ def build_train_lowering(arch: str, shape_name: str, mesh, *,
     fn = jax.jit(smapped, in_shardings=ns(in_specs), out_shardings=ns(out_specs),
                  donate_argnums=(0, 1))
     return fn, args, {"coded_fraction": arts.coded_fraction,
-                  "codec_backend": arts.codec.backend.name}
+                  "codec_backend": arts.codec.backend.name,
+                  "wire_buckets": (len(arts.pack_plan.buckets)
+                                   if arts.pack_plan else 0)}
 
 
 def build_prefill_lowering(arch: str, shape_name: str, mesh):

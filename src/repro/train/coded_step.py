@@ -13,8 +13,11 @@ subsets.  The step (manual over data axes, GSPMD-auto over 'model'):
      materializes the (d, l) partial-gradient matrix),
   3. multiplies by the responder mask (stragglers transmit nothing; proves
      the decode is independent of straggler payloads),
-  4. decodes the summed gradient with the host-computed float64 weights W
-     (zero rows at stragglers) via the gather or a2a schedule,
+  4. packs the coded encodings into the static ``PackPlan``'s bucketed flat
+     wire buffers (default; ``packed=False`` keeps the per-leaf escape
+     hatch) and decodes the summed gradient with the host-computed float64
+     weights W (zero rows at stragglers) via the gather or a2a schedule —
+     one collective choreography + one fused contraction per bucket,
   5. runs the optimizer update (replicated over data axes, model-sharded).
 
 All coding phases are delegated to a ``repro.coding.Codec``: ``schedule``
@@ -59,20 +62,48 @@ class StepArtifacts:
     plans: PyTree
     coded_fraction: float
     codec: coding.Codec | None = None
+    pack_plan: coding.PackPlan | None = None
 
     # ---- benchmark / driver hooks --------------------------------------
-    def compiled(self, batch):
+    def compiled(self, batch, donate: bool = False):
         """Jit the step for a batch (arrays or ShapeDtypeStructs).
 
         Collapses the `arts.step(shapes) -> jax.jit(fn)` dance every driver
         repeats; straggler patterns stay *inputs* to the returned callable
         (`fn(params, opt_state, batch, W, mask, rho)`), so one executable
         serves every drop pattern.
+
+        donate=True donates params/opt_state (`donate_argnums=(0, 1)`,
+        matching the Trainer's jit) so steady-state timing loops reuse the
+        update buffers — callers must then thread the returned params/state
+        into the next call instead of replaying the originals.
         """
         shapes = jax.tree.map(
             lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), batch)
         fn, _, _ = self.step(shapes)
+        if donate:
+            return jax.jit(fn, donate_argnums=(0, 1))
         return jax.jit(fn)
+
+    def lowered(self, batch, cfg, optimizer):
+        """Lower (don't execute) the step for abstract inputs: returns the
+        jax ``Lowered`` — ``.compile().as_text()`` feeds HLO analysis such
+        as the collective-count guards (`repro.launch.hlo_cost.analyze`).
+        Collapses the pshapes/oshapes/W/mask/rho ShapeDtypeStruct dance the
+        HLO test and the coding_packed bench would otherwise both hand-roll.
+        """
+        shapes = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), batch)
+        fn, _, _ = self.step(shapes)
+        pshapes = jax.eval_shape(
+            lambda: model_api.init(jax.random.PRNGKey(0), cfg))
+        oshapes = jax.eval_shape(optimizer.init, pshapes)
+        code = self.codec.code
+        return jax.jit(fn).lower(
+            pshapes, oshapes, shapes,
+            jax.ShapeDtypeStruct((code.n, code.m), jnp.float32),
+            jax.ShapeDtypeStruct((code.n,), jnp.float32),
+            jax.ShapeDtypeStruct((code.n, code.d), jnp.float32))
 
     def step_inputs(self, stragglers=()) -> dict[str, jax.Array]:
         """Drop-pattern hook: device-ready `W`/`mask`/`rho` for a straggler
@@ -95,6 +126,7 @@ def make_coded_train_step(cfg, code: GradCode, mesh, optimizer: Optimizer,
                           grad_scale: float | None = None,
                           encode_dtype: str = "float32",
                           backend: str | coding.CodecBackend = "auto",
+                          packed: bool = True,
                           use_kernels: bool | None = None) -> StepArtifacts:
     """Build the shard_map'd coded train step for one architecture.
 
@@ -109,6 +141,13 @@ def make_coded_train_step(cfg, code: GradCode, mesh, optimizer: Optimizer,
     backend: codec compute backend — "auto" | "ref" | "pallas" | "interpret"
     or a ``coding.CodecBackend`` instance.  use_kernels is the deprecated
     boolean spelling of the same choice (True -> "pallas").
+
+    packed (default True): aggregate coded leaves through the bucketed flat
+    wire buffers of ``repro.coding.packing`` — O(1) collectives and one
+    fused decode contraction per bucket per step, and the psum-fallback
+    leaves ride a single flat all-reduce.  ``packed=False`` is the per-leaf
+    escape hatch (one collective + one skinny contraction per coded leaf),
+    bit-identical by construction.
     """
     if use_kernels is not None:
         warnings.warn("use_kernels is deprecated; pass backend='pallas' "
@@ -145,6 +184,14 @@ def make_coded_train_step(cfg, code: GradCode, mesh, optimizer: Optimizer,
     ospecs = sharding.opt_state_specs(oshapes, pspecs)
     plans = codec.plan(pshapes, pspecs)
     coded_frac = codec.coded_fraction(pshapes, plans)
+    # §Tentpole (packed wire): static layout of every coded leaf's encoding
+    # into bucketed 128-aligned flat buffers (bucket key: wire dtype x
+    # effective model sharding).  Computed once here; the step then issues
+    # one collective choreography + one fused contraction per bucket.
+    pplan = (codec.pack_plan(pshapes, plans, specs=pspecs, model_size=ms)
+             if packed and codec.schedule.uses_encoding else None)
+    flat_plans = jax.tree.leaves(
+        plans, is_leaf=lambda x: isinstance(x, coding.LeafPlan))
 
     # §Perf lever (enc_constraint): the encoding of a model-sharded leaf can
     # silently lose its 'model' sharding at the manual-collective boundary
@@ -210,13 +257,30 @@ def make_coded_train_step(cfg, code: GradCode, mesh, optimizer: Optimizer,
                       for e, s, pl in zip(flat_e, flat_s, flat_p)]
             enc = td.unflatten(flat_e)
 
-        def dec_one(e, pl):
-            if not pl.coded:
-                return jax.lax.psum(e, data_axes)
-            return codec.decode_leaf(e, W, pl, data_axes,
-                                     W_row=W_row, emulate=degraded)
+        if pplan is not None:
+            # packed path: coded leaves ride the plan's flat buckets (one
+            # collective + one fused (n, L) contraction each); the psum
+            # fallback leaves are summed through a single concatenated
+            # all-reduce instead of one per leaf.
+            flat_enc, td = jax.tree.flatten(enc)
+            flat_grads = list(flat_enc)
+            bufs = codec.pack(flat_enc, pplan)
+            decs = [codec.decode_packed(b, W, data_axes, W_row=W_row,
+                                        emulate=degraded) for b in bufs]
+            for i, g_ in codec.unpack(decs, pplan).items():
+                flat_grads[i] = g_
+            for i, g_ in coding.psum_fallback(flat_enc, flat_plans,
+                                              data_axes).items():
+                flat_grads[i] = g_
+            grads = td.unflatten(flat_grads)
+        else:
+            def dec_one(e, pl):
+                if not pl.coded:
+                    return jax.lax.psum(e, data_axes)
+                return codec.decode_leaf(e, W, pl, data_axes,
+                                         W_row=W_row, emulate=degraded)
 
-        grads = jax.tree.map(dec_one, enc, plans)
+            grads = jax.tree.map(dec_one, enc, plans)
         grads = jax.tree.map(lambda g_: g_ * grad_scale, grads)
         gnorm = jnp.sqrt(sum(jnp.sum(g_ * g_) for g_ in jax.tree.leaves(grads)))
         loss_global = jax.lax.psum(loss_sum * mask_i, data_axes) / n  # responders' view
@@ -287,4 +351,5 @@ def make_coded_train_step(cfg, code: GradCode, mesh, optimizer: Optimizer,
         return stepfn, in_specs, out_specs
 
     return StepArtifacts(step=make, in_specs=(pspecs, ospecs), out_specs=None,
-                         plans=plans, coded_fraction=coded_frac, codec=codec)
+                         plans=plans, coded_fraction=coded_frac, codec=codec,
+                         pack_plan=pplan)

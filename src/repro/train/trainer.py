@@ -35,6 +35,7 @@ class Trainer:
     optimizer: Optimizer
     schedule: str = "gather"
     backend: str = "auto"              # codec backend: auto | ref | pallas
+    packed: bool = True                # bucketed wire buffers (coded_step)
     straggler_mode: str = "none"       # none | random | fixed
     fixed_stragglers: tuple = ()
     seed: int = 0
@@ -45,7 +46,8 @@ class Trainer:
         from repro.models import api as model_api
         self.arts = make_coded_train_step(self.cfg, self.code, self.mesh,
                                           self.optimizer, schedule=self.schedule,
-                                          backend=self.backend)
+                                          backend=self.backend,
+                                          packed=self.packed)
         self.batcher = CodedBatcher(self.code)
         key = jax.random.PRNGKey(self.seed)
         with set_mesh(self.mesh):

@@ -32,12 +32,13 @@ def _results_for(name: str):
 
 def test_registry_has_all_targets():
     assert set(REGISTRY) == {"table1", "stability", "fig3", "auc",
-                             "throughput", "straggler", "roofline"}
+                             "throughput", "straggler", "roofline",
+                             "coding_packed"}
 
 
 @pytest.mark.parametrize("name", sorted(
     {"table1", "stability", "fig3", "auc", "throughput", "straggler",
-     "roofline"}))
+     "roofline", "coding_packed"}))
 def test_quick_bench_runs_and_validates(name, tmp_path):
     results = _results_for(name)
     assert results, f"{name} emitted no results"

@@ -120,3 +120,25 @@ def test_ops_wrapper_modes():
     np.testing.assert_allclose(np.asarray(ops.decode(F, W, mode="ref")),
                                np.asarray(ops.decode(F, W, mode="interpret")),
                                rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------- pick_tile memo
+def test_pick_tile_alignment_preference_and_cache():
+    """pick_tile prefers align-multiples over larger unaligned divisors,
+    falls back to the largest divisor, and memoizes (it is an O(size)
+    Python loop re-run at every trace for every leaf shape)."""
+    from repro.kernels.coded_encode import pick_tile as pick
+    pick.cache_clear()
+    # aligned divisor preferred even when a larger unaligned one exists
+    assert pick(1024, 768, 128) == 512         # not 1024>target nor 768
+    assert pick(640, 512, 128) == 128          # 320 divides but is unaligned
+    # no aligned divisor: largest divisor <= target
+    assert pick(192, 128, 128) == 96
+    assert pick(7, 512, 128) == 7
+    # exact-size hit when size <= target and aligned
+    assert pick(256, 512, 128) == 256
+    before = pick.cache_info()
+    assert pick(640, 512, 128) == 128          # repeat: served by the cache
+    after = pick.cache_info()
+    assert after.hits == before.hits + 1
+    assert after.misses == before.misses

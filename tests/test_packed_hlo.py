@@ -1,0 +1,76 @@
+"""HLO-level collective-count regression guard for the packed codec.
+
+Compiles the real coded train step for a multi-leaf LM (14 coded leaves) on
+a (4 data x 1 model) host mesh and counts collective ops in the optimized
+HLO via ``repro.launch.hlo_cost``: the packed (default) step must issue at
+most 2 ``all-gather``/``all-to-all`` ops *per wire bucket* per step — one
+gather for the gather schedule, one all_to_all + one gather for a2a — where
+the per-leaf escape hatch issues one choreography per coded leaf.
+"""
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import make_code
+from repro.data import CodedBatcher, make_synthetic_batch
+from repro.launch import hlo_cost
+from repro.launch.mesh import make_local_mesh
+from repro.optim import get_optimizer
+from repro.train.coded_step import make_coded_train_step
+
+N = 4
+CODE = make_code(N, 3, 1, 2)
+ARCH = "qwen3-1.7b"
+
+
+@functools.lru_cache(maxsize=None)
+def _collective_counts(schedule: str, packed: bool):
+    if len(jax.devices()) < N:
+        pytest.skip(f"needs {N} devices")
+    cfg = get_config(ARCH).reduced()
+    mesh = make_local_mesh(N, 1)
+    opt = get_optimizer("sgd", 1e-2)
+    arts = make_coded_train_step(cfg, CODE, mesh, opt, schedule=schedule,
+                                 packed=packed)
+    rng = np.random.default_rng(0)
+    placed = CodedBatcher(CODE).place(make_synthetic_batch(rng, cfg, 8, 16))
+    txt = arts.lowered(placed, cfg, opt).compile().as_text()
+    counts = dict(hlo_cost.analyze(txt)["collective_counts"])
+    n_buckets = len(arts.pack_plan.buckets) if arts.pack_plan else 0
+    n_coded = sum(
+        p.coded for p in jax.tree.leaves(
+            arts.plans, is_leaf=lambda x: hasattr(x, "coded")))
+    return counts, n_buckets, n_coded
+
+
+def test_packed_gather_at_most_one_collective_per_bucket():
+    counts, n_buckets, n_coded = _collective_counts("gather", True)
+    assert n_buckets >= 1 and n_coded > 1          # a real multi-leaf model
+    assert counts.get("all-gather", 0) <= n_buckets
+    assert counts.get("all-to-all", 0) == 0
+
+
+def test_packed_a2a_at_most_two_collectives_per_bucket():
+    counts, n_buckets, _ = _collective_counts("a2a", True)
+    assert counts.get("all-to-all", 0) <= n_buckets
+    assert counts.get("all-gather", 0) <= n_buckets
+
+
+@pytest.mark.parametrize("schedule", ["gather", "a2a"])
+def test_packed_no_worse_than_per_leaf(schedule):
+    """The per-leaf escape hatch pays one choreography per coded leaf; the
+    packed default must never exceed it (and beats it whenever XLA has not
+    combined the per-leaf collectives itself)."""
+    packed, n_buckets, n_coded = _collective_counts(schedule, True)
+    per_leaf, _, _ = _collective_counts(schedule, False)
+
+    def total(c):
+        return c.get("all-gather", 0) + c.get("all-to-all", 0)
+
+    assert total(packed) <= total(per_leaf)
+    if total(per_leaf) >= n_coded:                 # XLA didn't combine them
+        assert total(packed) < total(per_leaf)
+        assert total(packed) <= 2 * n_buckets
