@@ -36,12 +36,13 @@ from repro.bench import (
     BenchSpec,
     capture_env,
     draw_patterns,
+    draw_patterns_hetero,
     mean_wait_s,
     register,
     time_sequence,
 )
 from repro.configs import get_config
-from repro.core import make_code
+from repro.core import make_code, make_hetero_code, plan_hetero
 from repro.core.runtime_model import (
     RuntimeParams,
     expected_total_runtime,
@@ -57,6 +58,18 @@ N_WORKERS = 4
 # same comm-heavy Sec-V calibration as bench_fig3_sim; at n=4 the model's
 # optima are (4,3,1) for the m=1 family and (4,2,2) for m>1
 CALIB = dict(lambda1=0.5, lambda2=0.2, t1=0.5, t2=16.0)
+# the heterogeneous rows use a computation-shift-dominated calibration
+# (load balancing only moves the computation term — communication is l/m
+# for every worker regardless of load) and a 4x per-worker speed spread.
+# Both plan families are searched under the same constraint s >= 1 (a real
+# straggler budget): without it the skewed-cluster optimum degenerates to
+# pure load balancing (r=1) or full replication (d=n) and the comparison
+# stops being about coding.  When max(speed)/sum(speeds) > 1/(s+m) the
+# fastest worker's proportional load saturates at the k-subset cap and the
+# plan redistributes the excess.
+HCALIB = dict(lambda1=0.5, lambda2=0.2, t1=16.0, t2=4.0)
+SPEEDS = (0.4, 0.8, 1.2, 1.6)
+K_HETERO = 4 * N_WORKERS  # subset granularity of the hetero plans
 
 
 def best_triple_m_gt1(params: RuntimeParams, npts: int) -> tuple[int, int, int]:
@@ -72,17 +85,22 @@ def best_triple_m_gt1(params: RuntimeParams, npts: int) -> tuple[int, int, int]:
 
 
 def _measure_scheme(cfg, code, schedule, backend, patterns, batch, params_init,
-                    packed: bool = True):
+                    packed: bool = True, partial: bool = False):
     """Mean measured wall-clock (s) of the jitted step across the patterns.
 
     The timing loop runs the steady-state training shape: params/opt_state
     are donated (`compiled(..., donate=True)`, matching the Trainer's jit)
     and each thunk threads the previous step's outputs into the next call.
+
+    With ``partial=True`` the step is built in partial-recovery mode (drop
+    patterns may exceed the design s) and the mean reported
+    ``decode_err_bound`` metric is returned alongside the mean time.
     """
     mesh = make_local_mesh(N_WORKERS, 1)
     opt = get_optimizer("sgd", 1e-2)
     arts = make_coded_train_step(cfg, code, mesh, opt, schedule=schedule,
-                                 backend=backend, packed=packed)
+                                 backend=backend, packed=packed,
+                                 partial=partial)
     placed = jax.tree.map(jnp.asarray, CodedBatcher(code).place(batch))
     fn = arts.compiled(placed, donate=True)
     # donation invalidates the argument buffers on real accelerators: work
@@ -90,18 +108,60 @@ def _measure_scheme(cfg, code, schedule, backend, patterns, batch, params_init,
     params0 = jax.tree.map(jnp.array, params_init)
     state = {"params": params0, "opt": opt.init(params0)}
     inputs = [arts.step_inputs(p.stragglers) for p in patterns]
+    bounds: list[float] = []
 
     def make_thunk(inp):
         def thunk():
-            p2, o2, metrics = fn(state["params"], state["opt"], placed,
-                                 inp["W"], inp["mask"], inp["rho"])
+            args = [inp["W"], inp["mask"], inp["rho"]]
+            if partial:
+                args.append(inp["err_factor"])
+            p2, o2, metrics = fn(state["params"], state["opt"], placed, *args)
             state["params"], state["opt"] = p2, o2
+            if partial:
+                bounds.append(float(metrics["decode_err_bound"][0]))
             return metrics
         return thunk
 
     thunks = [make_thunk(inp) for inp in inputs]
     times = time_sequence(thunks, warmup=thunks[0])
+    if partial:
+        return float(np.mean(times)), float(np.mean(bounds[1:] or bounds))
     return float(np.mean(times))
+
+
+def _search_skewed_plans(params: RuntimeParams, sim_iters: int, seed: int):
+    """Modeled plan search on the skewed cluster: the best *uniform* (d, s, m)
+    triple with equal loads vs the best *hetero* (s, m) plan with
+    speed-proportional loads — both evaluated with the same Monte-Carlo
+    heterogeneous draw (`draw_patterns_hetero`).  Returns
+    ((triple, wait), (plan, wait))."""
+    n = params.n
+    best_u, best_u_wait = None, float("inf")
+    for d in range(1, n + 1):
+        for m in range(1, d + 1):
+            s = d - m
+            if s < 1:
+                continue                # same s >= 1 budget as the hetero side
+            w = mean_wait_s(draw_patterns_hetero(
+                params, [d] * n, n, s, m, sim_iters, speeds=SPEEDS, seed=seed))
+            if w < best_u_wait:
+                best_u, best_u_wait = (d, s, m), w
+    best_h, best_h_wait = None, float("inf")
+    for r in range(2, n + 1):           # replication s + m
+        for m in range(1, r + 1):
+            s = r - m
+            if s < 1:
+                continue                # keep a real straggler budget
+            try:
+                plan = plan_hetero(SPEEDS, s, m, k=K_HETERO)
+            except ValueError:
+                continue
+            w = mean_wait_s(draw_patterns_hetero(
+                params, plan.loads, plan.k, s, m, sim_iters,
+                speeds=SPEEDS, seed=seed))
+            if w < best_h_wait:
+                best_h, best_h_wait = plan, w
+    return (best_u, best_u_wait), (best_h, best_h_wait)
 
 
 def bench_results(quick: bool = False) -> list[BenchResult]:
@@ -209,19 +269,92 @@ def bench_results(quick: bool = False) -> list[BenchResult]:
                  f"measured_step_s={measured_psum:.5f},"
                  f"predicted_recv_elems_per_worker={pred_psum:.0f}")
 
+    # ---- heterogeneous-cluster row (skewed per-worker speeds) -----------
+    # best uniform plan vs best speed-proportional hetero plan, both chosen
+    # by the same Monte-Carlo model on the skewed cluster, then run as real
+    # jitted steps; gated on the end-to-end (modeled wait + measured) ratio
+    hparams = RuntimeParams(n=N_WORKERS, **HCALIB)
+    (tri_u, wait_u), (hplan, wait_h) = _search_skewed_plans(
+        hparams, sim_iters, seed=21)
+    du, su, mu_ = tri_u
+    code_u = make_code(N_WORKERS, du, su, mu_)
+    pat_u = draw_patterns_hetero(hparams, [du] * N_WORKERS, N_WORKERS, su,
+                                 mu_, iters, speeds=SPEEDS, seed=22)
+    meas_u = _measure_scheme(cfg, code_u, "gather", "ref", pat_u, batch,
+                             params_init)
+    code_h = make_hetero_code(SPEEDS, hplan.s, hplan.m, k=hplan.k)
+    pat_h = draw_patterns_hetero(hparams, hplan.loads, hplan.k, hplan.s,
+                                 hplan.m, iters, speeds=SPEEDS, seed=23)
+    meas_h = _measure_scheme(cfg, code_h, "gather", "ref", pat_h, batch,
+                             params_init)
+    total_u = wait_u + meas_u
+    total_h = wait_h + meas_h
+    metrics["hetero_modeled_wait_s"] = round(wait_h, 4)
+    metrics["uniform_modeled_wait_s"] = round(wait_u, 4)
+    metrics["hetero_measured_step_s"] = round(meas_h, 5)
+    metrics["uniform_measured_step_s"] = round(meas_u, 5)
+    metrics["speedup_hetero_vs_uniform"] = round(total_u / total_h, 4)
+    lines.append(
+        f"straggler_e2e_hetero,speeds={SPEEDS},uniform_triple=({du},{su},{mu_}),"
+        f"hetero_sm=({hplan.s},{hplan.m}),k={hplan.k},loads={hplan.loads},"
+        f"total_uniform_s={total_u:.3f},total_hetero_s={total_h:.3f},"
+        f"speedup={total_u / total_h:.3f}x")
+    grid_rows.append({"schedule": "gather", "backend": "ref",
+                      "hetero": True, "speeds": list(SPEEDS),
+                      "loads": list(hplan.loads),
+                      "uniform_triple": list(tri_u),
+                      "total_uniform_s": total_u, "total_hetero_s": total_h})
+
+    # ---- partial-recovery row (graceful degradation past s) -------------
+    # the m>1 scheme with s+1 and s+2 injected stragglers: partial=True
+    # completes the step and reports its L2 error certificate, while the
+    # exact decode refuses the pattern (both asserted in tests/test_hetero)
+    d, s, m = triple_ours
+    code = make_code(N_WORKERS, d, s, m)
+    partial_ok = 1.0
+    for extra_drops in range(0, min(3, N_WORKERS - s)):
+        n_drop = s + extra_drops
+        pat = draw_patterns(params, d, s, m, iters, seed=31 + extra_drops,
+                            n_drop=n_drop)
+        meas_p, bound = _measure_scheme(cfg, code, "gather", "ref", pat,
+                                        batch, params_init, partial=True)
+        if not np.isfinite(bound) or not np.isfinite(meas_p):
+            partial_ok = 0.0
+        metrics[f"partial_measured_step_s_drop{n_drop}"] = round(meas_p, 5)
+        metrics[f"partial_err_bound_drop{n_drop}"] = round(bound, 4)
+        lines.append(
+            f"straggler_e2e_partial,n_drop={n_drop},s={s},"
+            f"measured_step_s={meas_p:.5f},decode_err_bound={bound:.4f}")
+    metrics["partial_completes_past_s"] = partial_ok
+    try:
+        from repro.coding import make_step_inputs
+        make_step_inputs(code, list(range(s + 1)))  # > s without partial
+        metrics["partial_exact_raises"] = 0.0
+    except ValueError:
+        metrics["partial_exact_raises"] = 1.0
+    lines.append(
+        f"straggler_e2e_partial_summary,"
+        f"completes_past_s={metrics['partial_completes_past_s']:.0f},"
+        f"exact_raises={metrics['partial_exact_raises']:.0f}")
+
     result = BenchResult(
         name="straggler_e2e",
         metrics=metrics,
         params={"n_workers": N_WORKERS, "d_model": d_model,
                 "global_batch": global_batch, "iters": iters,
                 "l_params": l, "triple_m1": list(triple_m1),
-                "triple_ours": list(triple_ours), "quick": quick, **CALIB},
+                "triple_ours": list(triple_ours), "quick": quick,
+                "hetero_speeds": list(SPEEDS), "hetero_k": K_HETERO,
+                "hetero_calib": HCALIB, **CALIB},
         env=capture_env(mesh=make_local_mesh(N_WORKERS, 1)),
         timing={"warmup": 1, "reps": iters,
                 "policy": "one timed sample per drawn straggler pattern"},
         gates={"speedup_total_ours_vs_uncoded": "max",
                "speedup_total_ours_vs_m1": "max",
-               "model_matches_sim_ours": "max"},
+               "model_matches_sim_ours": "max",
+               "speedup_hetero_vs_uniform": "max",
+               "partial_completes_past_s": "max",
+               "partial_exact_raises": "max"},
         extra={"lines": lines, "grid": grid_rows},
     )
     return [result]

@@ -1,7 +1,9 @@
-"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from
-results/dryrun/*.json.  Printed to stdout; EXPERIMENTS.md embeds the output.
+"""Generate the EXPERIMENTS.md §Dry-run, §Roofline and §Packed-wire tables
+from results/dryrun/*.json and BENCH_*.json.  Printed to stdout;
+EXPERIMENTS.md embeds the output.
 
-  PYTHONPATH=src python -m benchmarks.report [--mesh single]
+  PYTHONPATH=src python -m benchmarks.report [--mesh single] \
+      [--bench-json bench-out]
 
 The dry-run artifacts are NOT checked in (only the training-curve record
 `results/train_lm_coded.json` is).  Regenerate them locally first:
@@ -9,8 +11,11 @@ The dry-run artifacts are NOT checked in (only the training-curve record
   PYTHONPATH=src python -m repro.launch.dryrun            # full sweep
   PYTHONPATH=src python -m repro.launch.dryrun --help     # subsets
 
-See EXPERIMENTS.md §Regenerating dry-run artifacts.  With no artifacts this
-tool prints that instruction and exits 0 (empty tables are not an error).
+The packed-wire table reads BENCH_coding_packed.json from --bench-json
+(default bench-out/, the benchmarks.run output dir) and compares each gated
+metric against the committed benchmarks/baseline.json.  See EXPERIMENTS.md
+§Regenerating dry-run artifacts.  With no artifacts this tool prints the
+regeneration instruction and exits 0 (empty tables are not an error).
 """
 from __future__ import annotations
 
@@ -54,6 +59,29 @@ def dryrun_table(records: list[dict]) -> str:
     return "\n".join(lines)
 
 
+def packed_table(bench_dir: pathlib.Path) -> str:
+    """The PR-3 `coding_packed` gated metrics (HLO collective counts +
+    padding accounting) next to the committed baseline values."""
+    f = bench_dir / "BENCH_coding_packed.json"
+    if not f.is_file():
+        return (f"No {f} — run\n"
+                "  PYTHONPATH=src python -m benchmarks.run coding_packed "
+                "--quick --json-dir bench-out\nthen re-run this report.")
+    results = json.loads(f.read_text()).get("results", [])
+    base_path = pathlib.Path(__file__).resolve().parent / "baseline.json"
+    base = (json.loads(base_path.read_text())["benches"]
+            .get("coding_packed", {}) if base_path.is_file() else {})
+    lines = ["| metric | value | baseline | gated |", "|---|---|---|---|"]
+    for r in results:
+        gates = r.get("gates", {})
+        for metric in sorted(r.get("metrics", {})):
+            val = r["metrics"][metric]
+            lines.append(
+                f"| {metric} | {val:g} | {base.get(metric, '—')} | "
+                f"{'yes (' + gates[metric] + ')' if metric in gates else 'no'} |")
+    return "\n".join(lines)
+
+
 def load_records(mesh: str | None = None, schedule: str | None = None,
                  tag: str | None = "") -> list[dict]:
     out = []
@@ -74,16 +102,21 @@ def main() -> None:
     ap.add_argument("--mesh", default=None)
     ap.add_argument("--schedule", default=None)
     ap.add_argument("--tag", default="")
+    ap.add_argument("--bench-json", default="bench-out",
+                    help="dir of BENCH_*.json files (benchmarks.run output) "
+                         "for the packed-wire table")
     args = ap.parse_args()
+    print("### Packed-wire table (coding_packed)\n")
+    print(packed_table(pathlib.Path(args.bench_json)))
     if not RESULTS.is_dir() or not any(RESULTS.glob("*.json")):
-        print(f"No dry-run artifacts under {RESULTS}.")
+        print(f"\nNo dry-run artifacts under {RESULTS}.")
         print("Regenerate them with:")
         print("  PYTHONPATH=src python -m repro.launch.dryrun")
         print("then re-run this report.  (See EXPERIMENTS.md §Regenerating "
               "dry-run artifacts.)")
         return
     recs = load_records(args.mesh, args.schedule, args.tag)
-    print("### Dry-run table\n")
+    print("\n### Dry-run table\n")
     print(dryrun_table(recs))
     print("\n### Roofline table (single-pod)\n")
     rows = [roofline.analyze_record(r) for r in recs

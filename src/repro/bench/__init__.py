@@ -21,7 +21,12 @@ from .result import (
     validate_result,
     write_results,
 )
-from .straggler import StragglerPattern, draw_patterns, mean_wait_s
+from .straggler import (
+    StragglerPattern,
+    draw_patterns,
+    draw_patterns_hetero,
+    mean_wait_s,
+)
 from .timing import TimerPolicy, TimingStats, time_callable, time_sequence
 
 __all__ = [
@@ -34,6 +39,7 @@ __all__ = [
     "all_specs",
     "capture_env",
     "draw_patterns",
+    "draw_patterns_hetero",
     "get_spec",
     "load_results",
     "mean_wait_s",

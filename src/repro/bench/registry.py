@@ -37,6 +37,7 @@ def register(spec: BenchSpec) -> BenchSpec:
 
 
 def get_spec(name: str) -> BenchSpec:
+    """Look up one registered spec by name (KeyError lists what exists)."""
     try:
         return _REGISTRY[name]
     except KeyError:
@@ -46,8 +47,10 @@ def get_spec(name: str) -> BenchSpec:
 
 
 def all_specs() -> list[BenchSpec]:
+    """Every registered spec, sorted by name."""
     return [_REGISTRY[k] for k in sorted(_REGISTRY)]
 
 
 def names() -> list[str]:
+    """Sorted names of every registered spec."""
     return sorted(_REGISTRY)

@@ -10,6 +10,11 @@ therefore yields both the modeled cluster wait (the `(n-s)`-th order
 statistic, matching `repro.core.runtime_model.simulate_runtimes`) and the
 concrete dropout set (the `s` slowest workers) to feed the jitted step's
 `W`/`mask`/`rho` inputs.
+
+`draw_patterns_hetero` generalises the draw to heterogeneous clusters:
+per-worker subset loads (a `repro.core.hetero.HeteroPlan`'s load vector) and
+relative speeds scale the computation term, and `n_drop` lets the
+partial-recovery bench drop more than the design `s`.
 """
 
 from __future__ import annotations
@@ -30,6 +35,26 @@ class StragglerPattern:
     wait_s: float  # modeled master wait: (n-s)-th order statistic
 
 
+def _patterns_from_times(
+    times: np.ndarray, n: int, n_drop: int
+) -> list[StragglerPattern]:
+    """Order-statistic bookkeeping shared by the homogeneous and
+    heterogeneous draws: drop the `n_drop` slowest workers of each row and
+    record the `(n - n_drop)`-th order statistic as the master wait."""
+    out = []
+    for t in times:
+        order = np.argsort(t)
+        slow = tuple(int(i) for i in order[n - n_drop :]) if n_drop else ()
+        out.append(
+            StragglerPattern(
+                worker_times=t,
+                stragglers=slow,
+                wait_s=float(t[order[n - n_drop - 1]]),
+            )
+        )
+    return out
+
+
 def draw_patterns(
     params: RuntimeParams,
     d: int,
@@ -37,26 +62,63 @@ def draw_patterns(
     m: int,
     iters: int,
     seed: int = 0,
+    n_drop: int | None = None,
 ) -> list[StragglerPattern]:
-    """`iters` i.i.d. delay/dropout patterns for an `(n, d, s, m)` scheme."""
+    """`iters` i.i.d. delay/dropout patterns for an `(n, d, s, m)` scheme.
+
+    `n_drop` overrides how many of the slowest workers are dropped per draw
+    (default: the design `s`) — the partial-recovery bench injects `s + 1`
+    and beyond to measure graceful degradation, with the master then waiting
+    only for the `n - n_drop` fastest.
+    """
     rng = np.random.default_rng(seed)
     n = params.n
     comp = d * (params.t1 + rng.exponential(1.0 / params.lambda1, (iters, n)))
     comm = (params.t2 + rng.exponential(1.0 / params.lambda2, (iters, n))) / m
-    times = comp + comm
-    out = []
-    for t in times:
-        order = np.argsort(t)
-        slow = tuple(int(i) for i in order[n - s :]) if s else ()
-        out.append(
-            StragglerPattern(
-                worker_times=t,
-                stragglers=slow,
-                wait_s=float(t[order[n - s - 1]]),
-            )
-        )
-    return out
+    return _patterns_from_times(comp + comm, n, s if n_drop is None else n_drop)
+
+
+def draw_patterns_hetero(
+    params: RuntimeParams,
+    loads: np.ndarray | list[int],
+    k: int,
+    s: int,
+    m: int,
+    iters: int,
+    speeds: np.ndarray | list[float] | None = None,
+    seed: int = 0,
+    n_drop: int | None = None,
+) -> list[StragglerPattern]:
+    """Heterogeneous-cluster generalisation of `draw_patterns`.
+
+    Worker `i` holds `loads[i]` of `k` equal data subsets and computes at
+    relative speed `speeds[i]` (1.0 = the calibrated `RuntimeParams` rates),
+    finishing its round after
+
+        X_i = (loads[i] * n / k) * (t1 + Exp(lambda1)) / speeds[i]
+              + (t2 + Exp(lambda2)) / m
+
+    The computation term reduces exactly to the Sec-VI model for the uniform
+    scheme (`loads = d * ones`, `k = n`, unit speeds); communication is
+    load-independent — every worker transmits the same `l/m` encoding, so
+    only the compute side is scaled.  The heterogeneous *plan* equalises
+    `loads[i] / speeds[i]`, which keeps the straggler budget `s` available
+    for genuine noise instead of burning it on deterministically slow
+    workers.
+    """
+    rng = np.random.default_rng(seed)
+    n = params.n
+    loads = np.asarray(loads, dtype=np.float64)
+    speeds = np.ones(n) if speeds is None else np.asarray(speeds, dtype=np.float64)
+    assert loads.shape == (n,) and speeds.shape == (n,)
+    scale = loads * n / (k * speeds)  # (n,)
+    comp = scale[None, :] * (
+        params.t1 + rng.exponential(1.0 / params.lambda1, (iters, n))
+    )
+    comm = (params.t2 + rng.exponential(1.0 / params.lambda2, (iters, n))) / m
+    return _patterns_from_times(comp + comm, n, s if n_drop is None else n_drop)
 
 
 def mean_wait_s(patterns: list[StragglerPattern]) -> float:
+    """Mean modeled master wait across patterns (seconds)."""
     return float(np.mean([p.wait_s for p in patterns]))

@@ -14,7 +14,7 @@ package.
 from .backends import (BACKEND_NAMES, CodecBackend, PallasBackend, RefBackend,
                        resolve_backend)
 from .codec import Codec, decode_tree, encode_leaf, encode_tree, make_codec
-from .inputs import coding_worker_index, make_step_inputs
+from .inputs import coding_worker_index, make_step_inputs, uncovered_subsets
 from .layout import groups_to_leaf, leaf_to_groups
 from .packing import (WIRE_ALIGN, LeafSlot, PackPlan, WireBucket, enc_shape,
                       make_pack_plan, pack_bucket, psum_fallback,
@@ -39,5 +39,5 @@ __all__ = [
     "decode_leaf_gather", "decode_leaf_a2a",
     "all_gather_wire", "all_to_all_wire",
     "leaf_to_groups", "groups_to_leaf",
-    "make_step_inputs", "coding_worker_index",
+    "make_step_inputs", "coding_worker_index", "uncovered_subsets",
 ]

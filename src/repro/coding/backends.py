@@ -38,23 +38,29 @@ class CodecBackend:
     name: str = "abstract"
 
     def encode(self, G: jax.Array, C: jax.Array, *, out_dtype=None) -> jax.Array:
+        """Encode contraction: G (d, V, m[, R]) x C (d, m) -> (V[, R])."""
         raise NotImplementedError
 
     def decode(self, F: jax.Array, W: jax.Array, *, out_dtype=None) -> jax.Array:
+        """Decode contraction: F (n, V[, R]) x W (n, m) -> (V, m[, R])."""
         raise NotImplementedError
 
 
 @dataclasses.dataclass(frozen=True)
 class RefBackend(CodecBackend):
+    """Pure-jnp einsum reference backend: runs anywhere, XLA-fused, and
+    serves as the numerical oracle for the Pallas kernels."""
     name: str = "ref"
 
     def encode(self, G, C, *, out_dtype=None):
+        """Encode via einsum, f32 accumulation, cast to ``out_dtype``."""
         out_dtype = out_dtype or G.dtype
         sub = "jvur,ju->vr" if G.ndim == 4 else "jvu,ju->v"
         return jnp.einsum(sub, G.astype(jnp.float32),
                           C.astype(jnp.float32)).astype(out_dtype)
 
     def decode(self, F, W, *, out_dtype=None):
+        """Decode via einsum, f32 accumulation, cast to ``out_dtype``."""
         out_dtype = out_dtype or F.dtype
         sub = "nvr,nu->vur" if F.ndim == 3 else "nv,nu->vu"
         return jnp.einsum(sub, F.astype(jnp.float32),
@@ -63,14 +69,19 @@ class RefBackend(CodecBackend):
 
 @dataclasses.dataclass(frozen=True)
 class PallasBackend(CodecBackend):
+    """The TPU Mosaic kernels in ``repro.kernels``; ``interpret=True`` runs
+    the same kernels in Pallas interpret mode (bit-exact, slow — tests and
+    non-TPU hosts)."""
     name: str = "pallas"
     interpret: bool = False
 
     def encode(self, G, C, *, out_dtype=None):
+        """Encode via the ``coded_encode`` Pallas kernel."""
         return _encode_mod.coded_encode(G, C, interpret=self.interpret,
                                         out_dtype=out_dtype)
 
     def decode(self, F, W, *, out_dtype=None):
+        """Decode via the ``coded_decode`` Pallas kernel."""
         return _decode_mod.coded_decode(F, W, interpret=self.interpret,
                                         out_dtype=out_dtype)
 

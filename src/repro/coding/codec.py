@@ -11,8 +11,12 @@ A codec binds a gradient code to an aggregation ``Schedule`` and a compute
   decode  — run the schedule's collective choreography + contraction (eq. 19-21),
   unpack  — static slices + ``groups_to_leaf`` back to leaf layouts.
 
-New code families (approximate codes, heterogeneous placements) plug in by
-constructing a codec around their ``GradCode``; the train step never changes.
+New code families plug in by constructing a codec around their code object —
+the heterogeneous-load ``repro.core.hetero.HeteroCode`` and the
+partial-recovery least-squares weights both ride these same phases
+unchanged: only the host-side weight solve differs
+(``Codec.decode_weights(partial=True)`` returns the approximation plus its
+error certificate).
 """
 from __future__ import annotations
 
@@ -99,15 +103,20 @@ class Codec:
 
     # ---- planning
     def plan(self, tree: PyTree, specs: PyTree | None = None) -> PyTree:
+        """Choose every leaf's grouping dimension (``plan_tree``), honouring
+        the schedule's extra divisibility (a2a slices encodings n ways)."""
         return plan_tree(tree, specs, self.code.m,
                          self.schedule.n_split(self.code.n))
 
     def coded_fraction(self, tree: PyTree, plans: PyTree) -> float:
+        """Fraction of gradient bytes covered by the code (rest -> psum)."""
         return coded_fraction(tree, plans)
 
     # ---- encode
     def encode_leaf(self, g: jax.Array, coef: jax.Array,
                     plan: LeafPlan) -> jax.Array:
+        """Fold one subset's gradient leaf into the l/m encoding with this
+        worker's coefficient row (paper eq. 17/18) on the bound backend."""
         return encode_leaf(g, coef, plan, self.backend)
 
     def encoding_zero(self, p, plan: LeafPlan) -> jax.Array:
@@ -145,9 +154,28 @@ class Codec:
         return out
 
     # ---- decode
+    def decode_weights(self, responders, *, partial: bool = False):
+        """Host-side float64 decode-weight solve for a responder set.
+
+        With ``partial=False`` (the paper's regime) the exact weights are
+        returned and fewer than ``n - s`` responders raise.  With
+        ``partial=True`` *any* responder set is accepted: returns the
+        ``(W, err_factor)`` pair of the least-squares approximation, where
+        ``err_factor * sqrt(sum_j ||g_j||^2)`` upper-bounds the L2 decode
+        error (see :mod:`repro.core.hetero`).  The runtime decode phases
+        below consume ``W`` unchanged either way — degradation is purely a
+        property of the weights.
+        """
+        if partial:
+            return self.code.partial_decode_weights(responders)
+        return self.code.decode_weights(responders)
+
     def decode_leaf(self, f_leaf: jax.Array, W: jax.Array, plan: LeafPlan,
                     axis_names, *, W_row: jax.Array | None = None,
                     emulate: bool = False) -> jax.Array:
+        """Decode one coded leaf via the bound schedule's choreography
+        (``emulate=True`` selects the collective-free psum fallback for
+        degraded runtimes; see ``Schedule.decode_leaf``)."""
         return self.schedule.decode_leaf(f_leaf, W, plan, axis_names,
                                          self.code.n, self.backend,
                                          W_row=W_row, emulate=emulate)

@@ -1,4 +1,11 @@
-"""Host-side per-step inputs and worker indexing for the coded aggregation."""
+"""Host-side per-step inputs and worker indexing for the coded aggregation.
+
+Every straggler pattern maps to one set of small device inputs
+(``make_step_inputs``) fed to a *single* jitted step executable — patterns
+never trigger recompilation.  The float64 decode-weight solve runs on host,
+matching the paper's remark that master-side reconstruction is off the hot
+path.
+"""
 from __future__ import annotations
 
 from typing import TYPE_CHECKING, Sequence
@@ -11,36 +18,79 @@ if TYPE_CHECKING:  # annotation-only: keeps repro.coding import-independent
 
 
 def make_step_inputs(code: GradCode, stragglers: Sequence[int] | np.ndarray = (),
-                     dtype=np.float32) -> dict[str, np.ndarray]:
+                     dtype=np.float32, partial: bool = False,
+                     ) -> dict[str, np.ndarray]:
     """Host-side (float64 solve) per-straggler-pattern inputs to the jitted step.
+
+    Works for both the uniform :class:`~repro.core.schemes.GradCode` and the
+    heterogeneous :class:`~repro.core.hetero.HeteroCode` (whose placement
+    carries zero-weight padded slots).
+
+    partial: with ``False`` (default, the paper's regime) more than ``s``
+    stragglers raise — the code cannot decode exactly.  With ``True`` the
+    decode degrades gracefully: least-squares weights are returned together
+    with their error certificate (key ``err_factor``), and subsets whose
+    every holder straggled are dropped from the rho weights instead of
+    raising.
 
     Returns:
       mask : (n,)   1.0 at responders, 0.0 at stragglers
       W    : (n, m) decode weights, zero rows at stragglers
       rho  : (n, d) small-leaf weights: each subset counted once across its
-             responding holders (equal split).
+             responding holders (equal split); zero at padded slots
+      err_factor : () float scalar, only when ``partial=True`` — multiply by
+             ``sqrt(sum_j ||g_j||^2)`` for the L2 decode-error bound
     """
     n, d = code.n, code.d
     st = np.zeros(n, dtype=bool)
     st[np.asarray(list(stragglers), dtype=int)] = True
-    if st.sum() > code.s:
-        raise ValueError(f"more stragglers ({st.sum()}) than design s={code.s}")
+    if not partial and st.sum() > code.s:
+        raise ValueError(
+            f"more stragglers ({st.sum()}) than design s={code.s}; pass "
+            f"partial=True to decode a least-squares approximation instead")
     resp = np.nonzero(~st)[0]
-    W = code.decode_weights(resp).astype(dtype)
+    if partial:
+        W, err_factor = code.partial_decode_weights(resp)
+        W = W.astype(dtype)
+    else:
+        W = code.decode_weights(resp).astype(dtype)
     # rho: for subset j, responding holders split weight equally
     rho = np.zeros((n, d), dtype=dtype)
-    placement = code.placement()  # (n, d) subset ids
+    placement = code.placement()          # (n, d) subset ids
+    valid = code.slot_mask()              # (n, d) False at padded slots
     holders: dict[int, list[int]] = {}
     for i in range(n):
         for slot, j in enumerate(placement[i]):
-            holders.setdefault(int(j), []).append((i, slot))
+            if valid[i, slot]:
+                holders.setdefault(int(j), []).append((i, slot))
     for j, lst in holders.items():
         live = [(i, slot) for (i, slot) in lst if not st[i]]
         if not live:
+            if partial:
+                continue  # uncovered subset: dropped from the approximation
             raise ValueError(f"subset {j} has no responding holder")
         for (i, slot) in live:
             rho[i, slot] = 1.0 / len(live)
-    return {"mask": (~st).astype(dtype), "W": W, "rho": rho}
+    out = {"mask": (~st).astype(dtype), "W": W, "rho": rho}
+    if partial:
+        out["err_factor"] = np.asarray(err_factor, dtype=dtype)
+    return out
+
+
+def uncovered_subsets(code: GradCode,
+                      stragglers: Sequence[int] | np.ndarray = ()) -> int:
+    """Number of data subsets whose every holder straggled (their
+    contribution is unrecoverable; only relevant in partial mode)."""
+    st = np.zeros(code.n, dtype=bool)
+    st[np.asarray(list(stragglers), dtype=int)] = True
+    placement, valid = code.placement(), code.slot_mask()
+    covered: set[int] = set()
+    for i in range(code.n):
+        if st[i]:
+            continue
+        covered.update(int(j) for slot, j in enumerate(placement[i])
+                       if valid[i, slot])
+    return code.num_subsets - len(covered)
 
 
 def coding_worker_index(axis_names: str | tuple[str, ...]) -> jax.Array:

@@ -107,7 +107,34 @@ class WireBucket:
 
     @property
     def padding(self) -> int:
+        """Zero elements added for alignment and the n-divisible tail."""
         return self.size - self.unpadded
+
+    def worker_chunk_slots(self, n: int) -> tuple[tuple, ...]:
+        """Ragged per-worker view of the a2a chunking of this bucket.
+
+        The a2a schedule splits the ``size``-element buffer into ``n`` equal
+        chunks and worker ``p`` decodes chunk ``p`` — but the *slot*
+        boundaries do not align with the chunk boundaries, so each worker
+        covers a ragged set of (possibly partial) leaf segments.  Returns,
+        per worker, a tuple of ``(leaf_index, elem_lo, elem_hi)`` triples in
+        that leaf's flattened-encoding coordinates.  The union over workers
+        tiles every slot exactly once (asserted in tests) — the accounting
+        used to attribute per-worker decode work under heterogeneous loads.
+        """
+        assert self.size % n == 0, f"bucket size {self.size} not n={n}-divisible"
+        chunk = self.size // n
+        out = []
+        for p in range(n):
+            lo_p, hi_p = p * chunk, (p + 1) * chunk
+            segs = []
+            for s in self.slots:
+                lo = max(s.offset, lo_p)
+                hi = min(s.offset + s.size, hi_p)
+                if lo < hi:
+                    segs.append((s.leaf_index, lo - s.offset, hi - s.offset))
+            out.append(tuple(segs))
+        return tuple(out)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -131,6 +158,7 @@ class PackPlan:
 
     @property
     def num_coded_leaves(self) -> int:
+        """Total coded leaves across every bucket's slot table."""
         return sum(len(b.slots) for b in self.buckets)
 
     def recv_elems_per_worker(self, schedule) -> float:

@@ -103,11 +103,13 @@ class GatherSchedule(Schedule):
     name: str = "gather"
 
     def recv_elems_per_worker(self, l: int, n: int, m: int) -> float:
-        # all_gather of the (l/m)-element encodings: n-1 peer encodings in
+        """all_gather of the (l/m)-element encodings: n-1 peer encodings."""
         return (n - 1) * l / m
 
     def decode_leaf(self, f_leaf, W, plan, axis_names, n, backend, *,
                     W_row=None, emulate=False):
+        """all_gather the leaf's encodings, contract the (n, V, *rest) stack
+        with W locally (every chip is the master, SPMD)."""
         if emulate:
             return _decode_psum_emulated(f_leaf, W_row, plan, axis_names,
                                          backend)
@@ -116,6 +118,8 @@ class GatherSchedule(Schedule):
 
     def decode_packed(self, buf, W, axis_names, n, backend, *,
                       W_row=None, emulate=False):
+        """One all_gather + one fused (n, L) x (n, m) contraction for the
+        whole bucket."""
         if emulate:
             return _decode_packed_emulated(buf, W_row, axis_names, backend)
         gathered = wire.all_gather_wire(buf, axis_names)     # (n, L)
@@ -130,14 +134,17 @@ class AllToAllSchedule(Schedule):
     name: str = "a2a"
 
     def n_split(self, n: int) -> int:
+        """The a2a schedule slices encodings n ways along the grouping dim."""
         return n
 
     def recv_elems_per_worker(self, l: int, n: int, m: int) -> float:
-        # all_to_all of the l/m encoding + all_gather of decoded l/n slices
+        """all_to_all of the l/m encoding + all_gather of decoded slices."""
         return (n - 1) * l / (m * n) + (n - 1) * l / n
 
     def decode_leaf(self, f_leaf, W, plan, axis_names, n, backend, *,
                     W_row=None, emulate=False):
+        """all_to_all encoding chunks, decode the local 1/n slice of the
+        sum, all_gather the decoded slices (both hops at the wire dtype)."""
         if emulate:
             # the a2a choreography needs a native all_to_all; the fallback
             # degrades to the gather-equivalent psum (same decoded values)
@@ -156,6 +163,8 @@ class AllToAllSchedule(Schedule):
 
     def decode_packed(self, buf, W, axis_names, n, backend, *,
                       W_row=None, emulate=False):
+        """One all_to_all of the bucket's n chunks, one fused (n, L/n)
+        contraction, one all_gather of the decoded slices."""
         if emulate:
             # same degradation as decode_leaf: no native all_to_all on the
             # old-jax partial-auto runtime — fall back to the psum emulation
@@ -176,11 +185,12 @@ class PsumSchedule(Schedule):
     uses_encoding: bool = False
 
     def recv_elems_per_worker(self, l: int, n: int, m: int) -> float:
-        # ring all-reduce: reduce-scatter + all-gather phases, ~2l in total
+        """Ring all-reduce: reduce-scatter + all-gather phases, ~2l total."""
         return 2 * (n - 1) * l / n
 
     def decode_leaf(self, f_leaf, W, plan, axis_names, n, backend, *,
                     W_row=None, emulate=False):
+        """Plain all-reduce — the rho weighting happened at accumulation."""
         return jax.lax.psum(f_leaf, axis_names)
 
 
@@ -189,6 +199,8 @@ SCHEDULES = {s.name: s for s in
 
 
 def get_schedule(schedule: str | Schedule) -> Schedule:
+    """Resolve a schedule name ("gather" | "a2a" | "psum") to its object;
+    ``Schedule`` instances pass through unchanged."""
     if isinstance(schedule, Schedule):
         return schedule
     try:
@@ -201,11 +213,13 @@ def get_schedule(schedule: str | Schedule) -> Schedule:
 # ------------------------------------------- back-compat functional wrappers
 def decode_leaf_gather(f_leaf, W, plan, axis_names,
                        backend: CodecBackend = _REF):
+    """Functional wrapper over ``GatherSchedule.decode_leaf`` (back-compat)."""
     return SCHEDULES["gather"].decode_leaf(f_leaf, W, plan, axis_names,
                                            n=-1, backend=backend)
 
 
 def decode_leaf_a2a(f_leaf, W, plan, axis_names, n,
                     backend: CodecBackend = _REF):
+    """Functional wrapper over ``AllToAllSchedule.decode_leaf`` (back-compat)."""
     return SCHEDULES["a2a"].decode_leaf(f_leaf, W, plan, axis_names,
                                         n=n, backend=backend)

@@ -1,7 +1,10 @@
-"""Core gradient-coding library (the paper's contribution).
+"""Core gradient-coding library (the paper's contribution + extensions).
 
 Public API:
   GradCode, make_code, uncoded      — code constructions (poly / random)
+  HeteroCode, make_hetero_code,
+  HeteroPlan, plan_hetero           — heterogeneous-load scheme family and
+                                      partial-recovery decode (``hetero``)
   tradeoff                          — Theorem 1 feasibility helpers
   runtime_model                     — Section VI shifted-exponential model
   stability                         — Theorem 2 / condition-number machinery
@@ -9,11 +12,14 @@ Public API:
                                       (the codec subsystem: plan / encode /
                                       wire / decode with ref+pallas backends)
 """
-from . import coded_allreduce, cyclic, polynomial, random_code, runtime_model, stability, tradeoff
+from . import (coded_allreduce, cyclic, hetero, polynomial, random_code,
+               runtime_model, stability, tradeoff)
+from .hetero import HeteroCode, HeteroPlan, make_hetero_code, plan_hetero
 from .schemes import GradCode, make_code, uncoded
 
 __all__ = [
     "GradCode", "make_code", "uncoded",
-    "coded_allreduce", "cyclic", "polynomial", "random_code",
+    "HeteroCode", "HeteroPlan", "make_hetero_code", "plan_hetero",
+    "coded_allreduce", "cyclic", "hetero", "polynomial", "random_code",
     "runtime_model", "stability", "tradeoff",
 ]

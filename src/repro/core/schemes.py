@@ -69,13 +69,18 @@ class GradCode:
         C[i, j, u] = p-block of dataset (i+j)%n, row u, evaluated at worker i
         = (B @ V)[((i+j)%n)*m + u, i].
         """
-        P = self.B @ self.V  # (m*n, n)
+        P = self.P  # cached (m*n, n)
         C = np.zeros((self.n, self.d, self.m), dtype=np.float64)
         for i in range(self.n):
             for j in range(self.d):
                 w = (i + j) % self.n
                 C[i, j, :] = P[w * self.m : (w + 1) * self.m, i]
         return C
+
+    @cached_property
+    def P(self) -> np.ndarray:
+        """(m*n, n) full coefficient matrix ``B @ V`` (column i = worker i)."""
+        return self.B @ self.V
 
     @cached_property
     def assignment(self) -> np.ndarray:
@@ -86,31 +91,45 @@ class GradCode:
         """(n, d) subset ids per worker (for the data pipeline)."""
         return cyclic.placement_indices(self.n, self.d)
 
+    def slot_mask(self) -> np.ndarray:
+        """(n, d) bool validity of each placement slot (all True: the
+        uniform scheme has no padded slots — the hetero family does)."""
+        return np.ones((self.n, self.d), dtype=bool)
+
+    @property
+    def num_subsets(self) -> int:
+        """Number of equal-size data subsets (k = n for the paper's scheme)."""
+        return self.n
+
+    @property
+    def loads(self) -> tuple[int, ...]:
+        """Per-worker subset counts — uniform: every worker holds d."""
+        return (self.d,) * self.n
+
     # ---------------------------------------------------------------- decode
     def decode_weights(self, responders: np.ndarray | list[int]) -> np.ndarray:
         """(n, m) float64 W, zero rows at stragglers.
 
         ``responders``: indices (or bool mask of length n) of workers whose
-        results arrived; must number at least n - s.
+        results arrived; must number at least n - s.  (The solve itself —
+        paper eq. 21 — is shared with the heterogeneous family:
+        :func:`repro.core.hetero.exact_decode_weights`.)
         """
-        responders = np.asarray(responders)
-        if responders.dtype == bool:
-            responders = np.nonzero(responders)[0]
-        F = np.sort(responders)
-        if len(F) < self.n - self.s:
-            raise ValueError(
-                f"need >= n-s = {self.n - self.s} responders, got {len(F)}")
-        V_F = self.V[:, F]  # (n-s, |F|)
-        E = np.eye(self.n - self.s)[:, self.n - self.d :]  # (n-s, m)
-        if len(F) == self.n - self.s:
-            # square system: direct solve (paper eq. 21, A_F^{-1})
-            y = np.linalg.solve(V_F, E)
-        else:
-            # min-norm solution of V_F @ y = E (exact: V_F has full row rank)
-            y, *_ = np.linalg.lstsq(V_F, E, rcond=None)  # (|F|, m)
-        W = np.zeros((self.n, self.m), dtype=np.float64)
-        W[F] = y
-        return W
+        from .hetero import exact_decode_weights
+        return exact_decode_weights(self.V, self.n, self.s, self.m,
+                                    responders)
+
+    def partial_decode_weights(self, responders) -> tuple[np.ndarray, float]:
+        """Least-squares decode weights + error certificate for *any*
+        responder set, including fewer than ``n - s`` (partial recovery).
+
+        Returns ``(W, err_factor)``: the L2 decode error is bounded by
+        ``err_factor * sqrt(sum_j ||g_j||^2)`` for every gradient
+        realisation; the factor is ~0 whenever ``len(responders) >= n - s``.
+        See :mod:`repro.core.hetero` for the math.
+        """
+        from .hetero import partial_decode_weights
+        return partial_decode_weights(self.P, self.n, self.m, responders)
 
     def reconstruction_condition_number(self, responders) -> float:
         """cond(V_F V_F^T) — the quantity bounded by kappa in Theorem 2."""
@@ -137,12 +156,19 @@ class GradCode:
             F[i] = np.einsum("jvu,ju->v", Gr[rows], self.C[i])
         return F
 
-    def decode(self, F: np.ndarray, responders) -> np.ndarray:
+    def decode(self, F: np.ndarray, responders, *,
+               partial: bool = False) -> np.ndarray:
         """Reference decoder.  F: (n, l/m) encodings -> (l,) sum gradient.
 
-        Straggler rows of F may contain garbage; W zeroes them out.
+        Straggler rows of F may contain garbage; W zeroes them out.  With
+        ``partial=True`` any responder set is accepted and the best
+        least-squares approximation is returned (see
+        :meth:`partial_decode_weights` for the error certificate).
         """
-        W = self.decode_weights(responders)  # (n, m)
+        if partial:
+            W, _ = self.partial_decode_weights(responders)
+        else:
+            W = self.decode_weights(responders)  # (n, m)
         decoded = np.einsum("nv,nu->vu", F, W)  # (l/m, m)
         return decoded.reshape(-1)
 
@@ -162,7 +188,14 @@ def make_code(n: int, d: int, s: int, m: int, kind: str | None = None,
               seed: int = 0) -> GradCode:
     """Factory with the paper's stability-driven default: polynomial
     (Vandermonde) codes up to n = 20, Gaussian random codes beyond
-    (Sections III-C and IV-A)."""
+    (Sections III-C and IV-A).
+
+    >>> code = make_code(4, 3, 1, 2)
+    >>> code.C.shape            # per-worker (d, m) encode coefficient rows
+    (4, 3, 2)
+    >>> code.comm_fraction      # each worker transmits l/m floats
+    0.5
+    """
     if kind is None:
         kind = "poly" if n <= 20 else "random"
     return GradCode(n=n, d=d, s=s, m=m, kind=kind, seed=seed)

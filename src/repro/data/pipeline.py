@@ -20,24 +20,34 @@ from repro.core import GradCode
 
 @dataclasses.dataclass(frozen=True)
 class CodedBatcher:
-    """Redundant placement of a global batch according to a GradCode."""
+    """Redundant placement of a global batch according to a gradient code.
+
+    Serves both the uniform :class:`~repro.core.schemes.GradCode` (k = n
+    subsets, cyclic window) and the heterogeneous
+    :class:`~repro.core.hetero.HeteroCode` (k subsets decoupled from n,
+    ragged per-worker loads padded to d = max load; padded slots repeat a
+    held subset and carry zero encode/rho weight).
+    """
     code: GradCode
 
     def subset_size(self, global_batch: int) -> int:
-        n = self.code.n
-        if global_batch % n:
-            raise ValueError(f"global_batch {global_batch} not divisible by n={n}")
-        return global_batch // n
+        """Samples per data subset (= global batch / number of subsets)."""
+        k = self.code.num_subsets
+        if global_batch % k:
+            raise ValueError(
+                f"global_batch {global_batch} not divisible by k={k} subsets")
+        return global_batch // k
 
     def place(self, batch: dict[str, np.ndarray]) -> dict[str, np.ndarray]:
         """{name: (global_batch, ...)} -> {name: (n, d, b_subset, ...)}."""
-        n, d = self.code.n, self.code.d
+        n, d, k = self.code.n, self.code.d, self.code.num_subsets
         placement = self.code.placement()            # (n, d) subset ids
         out = {}
-        for k, v in batch.items():
+        for name, v in batch.items():
             b = self.subset_size(v.shape[0])
-            subsets = v.reshape(n, b, *v.shape[1:])  # subset j = rows j*b:(j+1)*b
-            out[k] = subsets[placement.reshape(-1)].reshape(n, d, b, *v.shape[1:])
+            subsets = v.reshape(k, b, *v.shape[1:])  # subset j = rows j*b:(j+1)*b
+            out[name] = subsets[placement.reshape(-1)].reshape(
+                n, d, b, *v.shape[1:])
         return out
 
     def unplace_subsets(self, placed: np.ndarray) -> np.ndarray:

@@ -63,7 +63,26 @@ def run_one(arch: str, shape: str, mesh_name: str, schedule: str,
             kw["encode_dtype"] = "bfloat16"
         if "per_leaf_wire" in opts:     # packed wire off: one collective/leaf
             kw["packed"] = False
-        if code_spec:
+        if "partial" in opts:           # partial-recovery step (err bound)
+            kw["partial"] = True
+        if "hetero" in opts:
+            # heterogeneous-load plan: a deterministic 2x geometric speed
+            # skew across the data workers (speeds geomspace(1, 2, n)),
+            # loads recorded in the result for the optimizer search.  Only
+            # the s,m of --code apply: per-worker loads replace a uniform d
+            from repro.launch.mesh import data_degree
+            from repro.core import make_hetero_code
+            import numpy as np
+            n = data_degree(mesh)
+            d, s, m = ((int(x) for x in code_spec.split(","))
+                       if code_spec else (3, 1, 2))
+            if code_spec:
+                print(f"hetero: ignoring d={d} of --code (loads derive "
+                      f"from the speed vector); using s={s}, m={m}",
+                      flush=True)
+            kw["code"] = make_hetero_code(
+                np.geomspace(1.0, 2.0, n), s, m)
+        elif code_spec:
             d, s, m = (int(x) for x in code_spec.split(","))
             from repro.launch.mesh import data_degree
             from repro.core import make_code
@@ -119,7 +138,10 @@ def main() -> None:
     ap.add_argument("--code", default=None,
                     help="d,s,m triple for the gradient code (default 3,1,2)")
     ap.add_argument("--opt", default="",
-                    help="comma list of perf levers: attn_remat, bf16_wire")
+                    help="comma list of levers: attn_remat, bf16_wire, "
+                         "moe_einsum, enc_constraint, per_leaf_wire, "
+                         "hetero (skewed-speed HeteroCode), partial "
+                         "(partial-recovery step with error certificate)")
     ap.add_argument("--tag", default="", help="tag for the result filename")
     ap.add_argument("--all", action="store_true",
                     help="sweep all arch x shape combos")

@@ -42,10 +42,14 @@ def default_code(n: int, *, d: int = 3, s: int = 1, m: int = 2, kind=None):
 
 
 # ------------------------------------------------------------- train batch
-def train_batch_shapes(cfg, n: int, d: int, shape) -> dict:
+def train_batch_shapes(cfg, n: int, d: int, shape, k: int | None = None) -> dict:
+    """ShapeDtypeStructs of the (n, d, b_subset, ...) coded batch layout.
+
+    ``k`` is the number of data subsets (defaults to n — the uniform
+    scheme; hetero codes decouple it)."""
     gb, S = shape.global_batch, shape.seq_len
-    b = gb // n
-    assert b >= 1, f"global_batch {gb} < n {n}"
+    b = gb // (k or n)
+    assert b >= 1, f"global_batch {gb} < number of subsets {k or n}"
     out = {}
     if cfg.family == "linear":
         out["x"] = _sds((n, d, b, cfg.d_model), "float32")
@@ -70,7 +74,8 @@ def build_train_lowering(arch: str, shape_name: str, mesh, *,
                          schedule: str = "gather", code=None,
                          optimizer: str = "adamw",
                          encode_dtype: str = "float32",
-                         backend: str = "auto", packed: bool = True):
+                         backend: str = "auto", packed: bool = True,
+                         partial: bool = False):
     """Returns (jitted_fn, args) ready for .lower(*args)."""
     cfg = dryrun_config(arch)
     shape = SHAPES[shape_name]
@@ -79,24 +84,30 @@ def build_train_lowering(arch: str, shape_name: str, mesh, *,
     opt = get_optimizer(optimizer, 1e-3)
     arts = make_coded_train_step(cfg, code, mesh, opt, schedule=schedule,
                                  encode_dtype=encode_dtype, backend=backend,
-                                 packed=packed)
+                                 packed=packed, partial=partial)
 
     pshapes = jax.eval_shape(lambda: model_api.init(jax.random.PRNGKey(0), cfg))
     oshapes = jax.eval_shape(opt.init, pshapes)
-    bshapes = train_batch_shapes(cfg, n, code.d, shape)
+    bshapes = train_batch_shapes(cfg, n, code.d, shape,
+                                 k=getattr(code, "num_subsets", n))
     smapped, in_specs, out_specs = arts.step(bshapes)
 
     args = (pshapes, oshapes, bshapes,
             _sds((n, code.m), "float32"), _sds((n,), "float32"),
             _sds((n, code.d), "float32"))
-    ns = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
-                                is_leaf=lambda x: isinstance(x, P))
+    if partial:
+        args = args + (_sds((), "float32"),)
+    def ns(t):
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), t,
+                            is_leaf=lambda x: isinstance(x, P))
     fn = jax.jit(smapped, in_shardings=ns(in_specs), out_shardings=ns(out_specs),
                  donate_argnums=(0, 1))
     return fn, args, {"coded_fraction": arts.coded_fraction,
-                  "codec_backend": arts.codec.backend.name,
-                  "wire_buckets": (len(arts.pack_plan.buckets)
-                                   if arts.pack_plan else 0)}
+                      "codec_backend": arts.codec.backend.name,
+                      "wire_buckets": (len(arts.pack_plan.buckets)
+                                       if arts.pack_plan else 0),
+                      "loads": list(arts.loads),
+                      "partial": partial}
 
 
 def build_prefill_lowering(arch: str, shape_name: str, mesh):

@@ -55,7 +55,16 @@ ENC_CONSTRAINT = False
 
 @dataclasses.dataclass(frozen=True)
 class StepArtifacts:
-    """Everything the launcher needs: the jit-able fn + shardings."""
+    """Everything the launcher needs to run one coded train step.
+
+    Carries the jit-able step builder (``step(batch_shapes) -> (fn, in_specs,
+    out_specs)``), the per-leaf coding plans, the bound ``Codec``, the static
+    ``PackPlan`` of the packed wire (None on the per-leaf path), the
+    per-worker subset-load vector (uniform codes: ``(d,) * n``; hetero codes:
+    the plan's ragged loads), and whether the step was built in
+    partial-recovery mode (the executable then takes a 7th ``err_factor``
+    input and emits a ``decode_err_bound`` metric).
+    """
     step: Callable
     in_specs: tuple
     out_specs: tuple
@@ -63,6 +72,8 @@ class StepArtifacts:
     coded_fraction: float
     codec: coding.Codec | None = None
     pack_plan: coding.PackPlan | None = None
+    loads: tuple[int, ...] = ()
+    partial: bool = False
 
     # ---- benchmark / driver hooks --------------------------------------
     def compiled(self, batch, donate: bool = False):
@@ -99,17 +110,22 @@ class StepArtifacts:
             lambda: model_api.init(jax.random.PRNGKey(0), cfg))
         oshapes = jax.eval_shape(optimizer.init, pshapes)
         code = self.codec.code
-        return jax.jit(fn).lower(
-            pshapes, oshapes, shapes,
-            jax.ShapeDtypeStruct((code.n, code.m), jnp.float32),
-            jax.ShapeDtypeStruct((code.n,), jnp.float32),
-            jax.ShapeDtypeStruct((code.n, code.d), jnp.float32))
+        args = [pshapes, oshapes, shapes,
+                jax.ShapeDtypeStruct((code.n, code.m), jnp.float32),
+                jax.ShapeDtypeStruct((code.n,), jnp.float32),
+                jax.ShapeDtypeStruct((code.n, code.d), jnp.float32)]
+        if self.partial:
+            args.append(jax.ShapeDtypeStruct((), jnp.float32))
+        return jax.jit(fn).lower(*args)
 
     def step_inputs(self, stragglers=()) -> dict[str, jax.Array]:
         """Drop-pattern hook: device-ready `W`/`mask`/`rho` for a straggler
-        set (the host-side float64 solve for this responder pattern)."""
+        set (the host-side float64 solve for this responder pattern).  On a
+        partial-recovery step the dict also carries the pattern's
+        ``err_factor`` certificate scalar (the executable's 7th input)."""
         assert self.codec is not None
-        inp = coding.make_step_inputs(self.codec.code, stragglers)
+        inp = coding.make_step_inputs(self.codec.code, stragglers,
+                                      partial=self.partial)
         return {k: jnp.asarray(v) for k, v in inp.items()}
 
 
@@ -127,12 +143,19 @@ def make_coded_train_step(cfg, code: GradCode, mesh, optimizer: Optimizer,
                           encode_dtype: str = "float32",
                           backend: str | coding.CodecBackend = "auto",
                           packed: bool = True,
+                          partial: bool = False,
                           use_kernels: bool | None = None) -> StepArtifacts:
     """Build the shard_map'd coded train step for one architecture.
 
-    grad_scale: decoded gradients are multiplied by this (default 1/n so the
-    update equals uncoded *mean*-gradient descent when per-subset losses are
-    means; the paper's linear workload uses sum losses and scale 1).
+    code: a uniform :class:`~repro.core.schemes.GradCode` or a heterogeneous
+    :class:`~repro.core.hetero.HeteroCode` — the batch layout's subset-slot
+    count is ``code.d`` (the max per-worker load for hetero plans, whose
+    padded slots carry zero encode/rho weight).
+
+    grad_scale: decoded gradients are multiplied by this (default 1/k with
+    k = ``code.num_subsets`` so the update equals uncoded *mean*-gradient
+    descent when per-subset losses are means; the paper's linear workload
+    uses sum losses and scale 1).
 
     encode_dtype: wire dtype of the transmitted encodings (the paper uses
     f32; "bfloat16" halves the collective bytes at ~3 decimal digits of
@@ -148,6 +171,14 @@ def make_coded_train_step(cfg, code: GradCode, mesh, optimizer: Optimizer,
     leaves ride a single flat all-reduce.  ``packed=False`` is the per-leaf
     escape hatch (one collective + one skinny contraction per coded leaf),
     bit-identical by construction.
+
+    partial (default False): build the step in partial-recovery mode — the
+    executable takes a 7th scalar input ``err_factor`` (from
+    ``make_step_inputs(..., partial=True)``, which then accepts straggler
+    sets *larger* than the design ``s`` instead of raising) and emits a
+    ``decode_err_bound`` metric: ``err_factor * sqrt(sum_j ||g_j||^2)``,
+    an upper bound on the L2 error of the least-squares decoded gradient
+    over the subsets that kept at least one live holder.
     """
     if use_kernels is not None:
         warnings.warn("use_kernels is deprecated; pass backend='pallas' "
@@ -159,8 +190,9 @@ def make_coded_train_step(cfg, code: GradCode, mesh, optimizer: Optimizer,
         raise ValueError(f"code.n={code.n} != data-parallel degree {n}")
     ms = mesh.shape["model"]
     loss_fn = model_api.make_loss(cfg)
+    k_subsets = getattr(code, "num_subsets", n)
     if grad_scale is None:
-        grad_scale = 1.0 if cfg.family == "linear" else 1.0 / n
+        grad_scale = 1.0 if cfg.family == "linear" else 1.0 / k_subsets
 
     codec = coding.make_codec(code, schedule=schedule, backend=backend,
                               wire_dtype=encode_dtype)
@@ -215,7 +247,7 @@ def make_coded_train_step(cfg, code: GradCode, mesh, optimizer: Optimizer,
     # the data axes (dim 0), so each worker reads its own row locally — no
     # axis_index/dynamic gather in the step (axis_index lowers to PartitionId,
     # which SPMD partitioning rejects when GSPMD-auto axes remain).
-    def body(params, opt_state, batch, W, mask, rho, Csh, Wsh):
+    def body(params, opt_state, batch, W, mask, rho, Csh, Wsh, ef=None):
         # local batch leaves: (1, d, b, ...) -> (d, b, ...)
         lb = jax.tree.map(lambda x: x[0], batch)
         Ci = Csh[0]       # (d, m)   this worker's coefficient rows
@@ -224,7 +256,10 @@ def make_coded_train_step(cfg, code: GradCode, mesh, optimizer: Optimizer,
         mask_i = mask[0]  # ()
 
         def per_subset(carry, xs):
-            enc, small, loss_acc = carry
+            if partial:
+                enc, small, loss_acc, gss_acc = carry
+            else:
+                enc, small, loss_acc = carry
             sub, cj, rj = xs
             lval, g = jax.value_and_grad(loss_fn)(params, sub)
 
@@ -236,11 +271,25 @@ def make_coded_train_step(cfg, code: GradCode, mesh, optimizer: Optimizer,
                 return e + contrib
 
             enc = jax.tree.map(fold, enc, g, plans)
+            if partial:
+                # rho-weighted subset gradient sumsq: psummed it becomes
+                # sum_j ||g_j||^2 over covered subsets — the certificate's
+                # gradient-norm term
+                gss = sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                          for l in jax.tree.leaves(g))
+                return (enc, small, loss_acc + rj * lval,
+                        gss_acc + rj * gss), None
             return (enc, small, loss_acc + rj * lval), None
 
         init = (jax.tree.map(codec.encoding_zero, params, plans),
                 None, jnp.zeros((), jnp.float32))
-        (enc, _, loss_sum), _ = scan_subsets(per_subset, init, (lb, Ci, rho_i))
+        if partial:
+            init = init + (jnp.zeros((), jnp.float32),)
+            (enc, _, loss_sum, gss_sum), _ = scan_subsets(
+                per_subset, init, (lb, Ci, rho_i))
+        else:
+            (enc, _, loss_sum), _ = scan_subsets(per_subset, init,
+                                                 (lb, Ci, rho_i))
 
         # stragglers transmit nothing — zero the payload to prove independence
         enc = jax.tree.map(
@@ -283,14 +332,18 @@ def make_coded_train_step(cfg, code: GradCode, mesh, optimizer: Optimizer,
             grads = jax.tree.map(dec_one, enc, plans)
         grads = jax.tree.map(lambda g_: g_ * grad_scale, grads)
         gnorm = jnp.sqrt(sum(jnp.sum(g_ * g_) for g_ in jax.tree.leaves(grads)))
-        loss_global = jax.lax.psum(loss_sum * mask_i, data_axes) / n  # responders' view
+        # responders' view, normalised by the subset count (= n uniformly)
+        loss_global = jax.lax.psum(loss_sum * mask_i, data_axes) / k_subsets
 
         new_params, new_opt = optimizer.update(grads, opt_state, params)
         metrics = {"loss": loss_global[None], "grad_norm": gnorm[None]}
+        if partial:
+            bound = ef * jnp.sqrt(jax.lax.psum(gss_sum, data_axes))
+            metrics["decode_err_bound"] = bound[None]
         return new_params, new_opt, metrics
 
     # psum baseline: plain rho-weighted all-reduce (uncoded / straggler-aware)
-    def body_psum(params, opt_state, batch, W, mask, rho, Csh, Wsh):
+    def body_psum(params, opt_state, batch, W, mask, rho, Csh, Wsh, ef=None):
         lb = jax.tree.map(lambda x: x[0], batch)
         rho_i = rho[0]
         mask_i = mask[0]
@@ -307,9 +360,14 @@ def make_coded_train_step(cfg, code: GradCode, mesh, optimizer: Optimizer,
         (acc, loss_sum), _ = scan_subsets(per_subset, init, (lb, rho_i))
         grads = jax.tree.map(lambda a: jax.lax.psum(a, data_axes) * grad_scale, acc)
         gnorm = jnp.sqrt(sum(jnp.sum(g_ * g_) for g_ in jax.tree.leaves(grads)))
-        loss_global = jax.lax.psum(loss_sum * mask_i, data_axes) / n
+        loss_global = jax.lax.psum(loss_sum * mask_i, data_axes) / k_subsets
         new_params, new_opt = optimizer.update(grads, opt_state, params)
-        return new_params, new_opt, {"loss": loss_global[None], "grad_norm": gnorm[None]}
+        metrics = {"loss": loss_global[None], "grad_norm": gnorm[None]}
+        if partial:
+            # the psum baseline carries no code: rho already drops uncovered
+            # subsets exactly, so the certificate term is identically zero
+            metrics["decode_err_bound"] = jnp.zeros((1,), jnp.float32)
+        return new_params, new_opt, metrics
 
     fn = body_psum if not codec.schedule.uses_encoding else body
 
@@ -335,21 +393,33 @@ def make_coded_train_step(cfg, code: GradCode, mesh, optimizer: Optimizer,
         # worker-row operands: dim 0 split over the (flattened) data axes
         dspec = P(data_axes if len(data_axes) > 1 else data_axes[0])
         in_specs = (pspecs, ospecs, bspecs, P(), P(), P())
-        out_specs = (pspecs, ospecs, {"loss": P(), "grad_norm": P()})
+        mspecs = {"loss": P(), "grad_norm": P()}
+        if partial:
+            in_specs = in_specs + (P(),)          # the err_factor scalar
+            mspecs["decode_err_bound"] = P()
+        out_specs = (pspecs, ospecs, mspecs)
         smapped = shard_map(fn, mesh=mesh,
                             in_specs=(_strip((pspecs, ospecs, bspecs, P()))
-                                      + (dspec, dspec, dspec, dspec)),
+                                      + (dspec, dspec, dspec, dspec)
+                                      + ((P(),) if partial else ())),
                             out_specs=_strip(out_specs),
                             axis_names=set(data_axes), check_vma=False)
 
-        def stepfn(params, opt_state, batch, W, mask, rho):
-            # W enters twice: replicated (decode needs all n rows) and split
-            # over workers (each worker's own row, for the emulated decode);
-            # mask/rho/C are split so each worker sees only its own row
-            return smapped(params, opt_state, batch, W, mask, rho, C, W)
+        # W enters twice: replicated (decode needs all n rows) and split
+        # over workers (each worker's own row, for the emulated decode);
+        # mask/rho/C are split so each worker sees only its own row
+        if partial:
+            def stepfn(params, opt_state, batch, W, mask, rho, err_factor):
+                return smapped(params, opt_state, batch, W, mask, rho, C, W,
+                               err_factor)
+        else:
+            def stepfn(params, opt_state, batch, W, mask, rho):
+                return smapped(params, opt_state, batch, W, mask, rho, C, W)
 
         return stepfn, in_specs, out_specs
 
     return StepArtifacts(step=make, in_specs=(pspecs, ospecs), out_specs=None,
                          plans=plans, coded_fraction=coded_frac, codec=codec,
-                         pack_plan=pplan)
+                         pack_plan=pplan,
+                         loads=tuple(getattr(code, "loads", (code.d,) * n)),
+                         partial=partial)

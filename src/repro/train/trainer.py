@@ -36,6 +36,7 @@ class Trainer:
     schedule: str = "gather"
     backend: str = "auto"              # codec backend: auto | ref | pallas
     packed: bool = True                # bucketed wire buffers (coded_step)
+    partial: bool = False              # partial-recovery decode past s
     straggler_mode: str = "none"       # none | random | fixed
     fixed_stragglers: tuple = ()
     seed: int = 0
@@ -47,7 +48,8 @@ class Trainer:
         self.arts = make_coded_train_step(self.cfg, self.code, self.mesh,
                                           self.optimizer, schedule=self.schedule,
                                           backend=self.backend,
-                                          packed=self.packed)
+                                          packed=self.packed,
+                                          partial=self.partial)
         self.batcher = CodedBatcher(self.code)
         key = jax.random.PRNGKey(self.seed)
         with set_mesh(self.mesh):
@@ -96,13 +98,16 @@ class Trainer:
             smapped, in_specs, _ = self.arts.step(shapes)
             self._jitted[keyshape] = jax.jit(smapped, donate_argnums=(0, 1))
         fn = self._jitted[keyshape]
-        inp = make_step_inputs(self.code, self._stragglers())
+        inp = make_step_inputs(self.code, self._stragglers(),
+                               partial=self.partial)
+        args = [jnp.asarray(inp["W"]), jnp.asarray(inp["mask"]),
+                jnp.asarray(inp["rho"])]
+        if self.partial:
+            args.append(jnp.asarray(inp["err_factor"]))
         with set_mesh(self.mesh):
             self.params, self.opt_state, metrics = fn(
                 self.params, self.opt_state,
-                jax.tree.map(jnp.asarray, placed),
-                jnp.asarray(inp["W"]), jnp.asarray(inp["mask"]),
-                jnp.asarray(inp["rho"]))
+                jax.tree.map(jnp.asarray, placed), *args)
         self._step_count += 1
         self.maybe_checkpoint()
         return {k: float(v[0]) for k, v in metrics.items()}

@@ -1,0 +1,138 @@
+"""Dependency-free docs checker: the part of `mkdocs build --strict` that can
+run in environments without mkdocs (this container, the tier-1 test suite).
+
+Checks, over the `docs/` tree and `mkdocs.yml`:
+
+  1. every page referenced in the mkdocs nav exists;
+  2. every relative markdown link in docs/**/*.md resolves to a file
+     (anchors and external http(s)/mailto links are skipped);
+  3. every `::: module.path` mkdocstrings directive imports;
+  4. docstring coverage: every public symbol re-exported by
+     ``repro.coding.__all__`` and ``repro.bench.__all__`` has a nonempty
+     docstring, and an AST-level scan of ``src/repro/coding/*.py`` +
+     ``src/repro/train/coded_step.py`` finds no undocumented public
+     module/class/function/method (the local mirror of the ruff ``D1``
+     rule scoped in pyproject.toml).
+
+Exit code 0 = clean; nonzero prints each failure on its own line.
+
+  PYTHONPATH=src python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import ast
+import importlib
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+DOCS = ROOT / "docs"
+
+# the pydocstyle-enforced scope (mirror of pyproject's scoped ruff D1 rule)
+DOCSTRING_SCOPE = sorted((ROOT / "src/repro/coding").glob("*.py")) + [
+    ROOT / "src/repro/train/coded_step.py",
+    ROOT / "src/repro/core/hetero.py",
+]
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_DIRECTIVE = re.compile(r"^::: ([\w.]+)\s*$", re.M)
+_NAV_MD = re.compile(r":\s*([\w\-./]+\.md)\s*$", re.M)
+
+
+def check_nav(errors: list[str]) -> None:
+    """Every .md file named in mkdocs.yml's nav exists under docs/."""
+    cfg = (ROOT / "mkdocs.yml").read_text()
+    for page in _NAV_MD.findall(cfg):
+        if not (DOCS / page).is_file():
+            errors.append(f"mkdocs.yml: nav entry {page!r} not found in docs/")
+
+
+def check_links(errors: list[str]) -> None:
+    """Relative links between docs pages resolve to existing files."""
+    for md in sorted(DOCS.rglob("*.md")):
+        for target in _LINK.findall(md.read_text()):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            if not (md.parent / path).resolve().exists():
+                errors.append(f"{md.relative_to(ROOT)}: broken link {target!r}")
+
+
+def check_directives(errors: list[str]) -> None:
+    """Every `::: module` mkdocstrings directive names an importable module."""
+    for md in sorted(DOCS.rglob("*.md")):
+        for mod in _DIRECTIVE.findall(md.read_text()):
+            try:
+                importlib.import_module(mod)
+            except Exception as e:  # noqa: BLE001 — report, keep scanning
+                errors.append(
+                    f"{md.relative_to(ROOT)}: directive ::: {mod} failed to "
+                    f"import ({type(e).__name__}: {e})")
+
+
+def check_public_api_docstrings(errors: list[str]) -> None:
+    """Every re-exported public symbol carries a nonempty docstring."""
+    for modname in ("repro.coding", "repro.bench"):
+        mod = importlib.import_module(modname)
+        for name in getattr(mod, "__all__", []):
+            obj = getattr(mod, name, None)
+            if obj is None:
+                errors.append(f"{modname}.__all__ names missing attr {name!r}")
+                continue
+            if not callable(obj) and not isinstance(obj, type):
+                continue  # constants (SCHEDULES, WIRE_ALIGN, ...) need none
+            if not (getattr(obj, "__doc__", None) or "").strip():
+                errors.append(f"{modname}.{name}: public symbol has no "
+                              f"docstring")
+
+
+def _scan_ast(path: pathlib.Path, errors: list[str]) -> None:
+    tree = ast.parse(path.read_text())
+    rel = path.relative_to(ROOT)
+    if ast.get_docstring(tree) is None:
+        errors.append(f"{rel}:1: undocumented public module")
+
+    def walk(node, prefix=""):
+        for ch in ast.iter_child_nodes(node):
+            if isinstance(ch, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)):
+                if not ch.name.startswith("_"):
+                    if ast.get_docstring(ch) is None:
+                        kind = ("class" if isinstance(ch, ast.ClassDef)
+                                else "function")
+                        errors.append(f"{rel}:{ch.lineno}: undocumented "
+                                      f"public {kind} {prefix}{ch.name}")
+                if isinstance(ch, ast.ClassDef):
+                    walk(ch, prefix=f"{ch.name}.")
+
+    walk(tree)
+
+
+def check_scope_docstrings(errors: list[str]) -> None:
+    """AST D1 mirror over the enforced packages (works without ruff)."""
+    for path in DOCSTRING_SCOPE:
+        _scan_ast(path, errors)
+
+
+def main() -> int:
+    """Run every check; print failures; return a shell exit code."""
+    errors: list[str] = []
+    check_nav(errors)
+    check_links(errors)
+    check_directives(errors)
+    check_public_api_docstrings(errors)
+    check_scope_docstrings(errors)
+    for e in errors:
+        print(e)
+    if errors:
+        print(f"\n{len(errors)} docs check failure(s)")
+        return 1
+    print("docs checks clean (nav, links, directives, docstring coverage)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
