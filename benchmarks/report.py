@@ -1,6 +1,6 @@
-"""Generate the EXPERIMENTS.md §Dry-run, §Roofline and §Packed-wire tables
-from results/dryrun/*.json and BENCH_*.json.  Printed to stdout;
-EXPERIMENTS.md embeds the output.
+"""Generate the EXPERIMENTS.md §Dry-run, §Roofline, §Packed-wire and
+§Autotune tables from results/dryrun/*.json and BENCH_*.json.  Printed to
+stdout; EXPERIMENTS.md embeds the output.
 
   PYTHONPATH=src python -m benchmarks.report [--mesh single] \
       [--bench-json bench-out]
@@ -59,18 +59,20 @@ def dryrun_table(records: list[dict]) -> str:
     return "\n".join(lines)
 
 
-def packed_table(bench_dir: pathlib.Path) -> str:
-    """The PR-3 `coding_packed` gated metrics (HLO collective counts +
-    padding accounting) next to the committed baseline values."""
-    f = bench_dir / "BENCH_coding_packed.json"
+def bench_metric_table(bench_dir: pathlib.Path, target: str,
+                       baseline_key: str) -> str:
+    """Gated-metric table for one bench target: each recorded metric next to
+    the committed `baseline.json` value and its gate direction (if any).
+    Serves the `coding_packed` (PR 3) and `autotune` (PR 5) tables."""
+    f = bench_dir / f"BENCH_{target}.json"
     if not f.is_file():
         return (f"No {f} — run\n"
-                "  PYTHONPATH=src python -m benchmarks.run coding_packed "
+                f"  PYTHONPATH=src python -m benchmarks.run {target} "
                 "--quick --json-dir bench-out\nthen re-run this report.")
     results = json.loads(f.read_text()).get("results", [])
     base_path = pathlib.Path(__file__).resolve().parent / "baseline.json"
     base = (json.loads(base_path.read_text())["benches"]
-            .get("coding_packed", {}) if base_path.is_file() else {})
+            .get(baseline_key, {}) if base_path.is_file() else {})
     lines = ["| metric | value | baseline | gated |", "|---|---|---|---|"]
     for r in results:
         gates = r.get("gates", {})
@@ -80,6 +82,18 @@ def packed_table(bench_dir: pathlib.Path) -> str:
                 f"| {metric} | {val:g} | {base.get(metric, '—')} | "
                 f"{'yes (' + gates[metric] + ')' if metric in gates else 'no'} |")
     return "\n".join(lines)
+
+
+def packed_table(bench_dir: pathlib.Path) -> str:
+    """The PR-3 `coding_packed` gated metrics (HLO collective counts +
+    padding accounting) next to the committed baseline values."""
+    return bench_metric_table(bench_dir, "coding_packed", "coding_packed")
+
+
+def autotune_table(bench_dir: pathlib.Path) -> str:
+    """The PR-5 `autotune` gated metrics (adaptive-vs-static speedups, MLE
+    recovery, planner paper-anchor) next to the committed baseline values."""
+    return bench_metric_table(bench_dir, "autotune", "autotune")
 
 
 def load_records(mesh: str | None = None, schedule: str | None = None,
@@ -108,6 +122,8 @@ def main() -> None:
     args = ap.parse_args()
     print("### Packed-wire table (coding_packed)\n")
     print(packed_table(pathlib.Path(args.bench_json)))
+    print("\n### Autotune table (autotune)\n")
+    print(autotune_table(pathlib.Path(args.bench_json)))
     if not RESULTS.is_dir() or not any(RESULTS.glob("*.json")):
         print(f"\nNo dry-run artifacts under {RESULTS}.")
         print("Regenerate them with:")

@@ -26,7 +26,14 @@ import numpy as np
 
 @dataclasses.dataclass(frozen=True)
 class RuntimeParams:
-    """Shifted-exponential model constants (paper Table in Sec. VI-A)."""
+    """Shifted-exponential model constants (paper Table in Sec. VI-A).
+
+    Per-subset computation time is ``t1 + Exp(lambda1)``; full ``l``-dim
+    communication time is ``t2 + Exp(lambda2)`` — both i.i.d. across the
+    ``n`` workers.  These four constants fully determine the optimal
+    ``(d, s, m)`` triple; at runtime they are *fitted* from telemetry by
+    ``repro.tune.fit_runtime_params`` (which returns this class).
+    """
     n: int
     lambda1: float  # computation straggling rate
     lambda2: float  # communication straggling rate

@@ -19,6 +19,8 @@ from .schemes import GradCode
 
 
 def entropy(q: float) -> float:
+    """Binary (natural-log) entropy H(q), extended by 0 at the endpoints —
+    the combinatorial term inside the paper's f_{n,n1} bound."""
     if q <= 0.0 or q >= 1.0:
         return 0.0
     return -q * math.log(q) - (1 - q) * math.log(1 - q)

@@ -82,6 +82,33 @@ def run_one(arch: str, shape: str, mesh_name: str, schedule: str,
                       flush=True)
             kw["code"] = make_hetero_code(
                 np.geomspace(1.0, 2.0, n), s, m)
+        elif "autotune" in opts:
+            # the cluster-free measure->fit->plan loop (docs/autotune.md):
+            # fit the Sec-VI model from a synthetic telemetry window drawn
+            # at the demo calibration, rank the (d,s,m) x schedule space,
+            # and lower the winning plan's codec; the ranked head is
+            # recorded in the result JSON for the optimizer search.
+            from repro.launch.mesh import data_degree
+            from repro.core import make_code
+            from repro.core.runtime_model import RuntimeParams
+            from repro.tune import rank_plans, synthetic_fit
+            n = data_degree(mesh)
+            calib = RuntimeParams(n=n, lambda1=0.5, lambda2=0.2,
+                                  t1=0.5, t2=16.0)
+            fit = synthetic_fit(calib, steps=200, seed=7)
+            ranked = rank_plans(fit, schedules=(schedule,), npts=10_000)
+            top = ranked[0]
+            print(f"autotune: fitted (t1={fit.params.t1:.3f}, "
+                  f"l1={fit.params.lambda1:.3f}, t2={fit.params.t2:.3f}, "
+                  f"l2={fit.params.lambda2:.3f}); lowering "
+                  f"{top.describe()}", flush=True)
+            kw["code"] = make_code(n, top.d, top.s, top.m)
+            kw["packed"] = top.packed
+            rec["autotune_plans"] = [p.describe() for p in ranked[:5]]
+            rec["autotune_fit"] = {"t1": fit.params.t1,
+                                   "lambda1": fit.params.lambda1,
+                                   "t2": fit.params.t2,
+                                   "lambda2": fit.params.lambda2}
         elif code_spec:
             d, s, m = (int(x) for x in code_spec.split(","))
             from repro.launch.mesh import data_degree
@@ -141,7 +168,9 @@ def main() -> None:
                     help="comma list of levers: attn_remat, bf16_wire, "
                          "moe_einsum, enc_constraint, per_leaf_wire, "
                          "hetero (skewed-speed HeteroCode), partial "
-                         "(partial-recovery step with error certificate)")
+                         "(partial-recovery step with error certificate), "
+                         "autotune (fit the Sec-VI model from synthetic "
+                         "telemetry and lower the planner's top (d,s,m))")
     ap.add_argument("--tag", default="", help="tag for the result filename")
     ap.add_argument("--all", action="store_true",
                     help="sweep all arch x shape combos")

@@ -29,6 +29,7 @@ the kernels, in interpret mode off-TPU).
 from __future__ import annotations
 
 import dataclasses
+import time
 import warnings
 from typing import Any, Callable
 
@@ -117,6 +118,30 @@ class StepArtifacts:
         if self.partial:
             args.append(jax.ShapeDtypeStruct((), jnp.float32))
         return jax.jit(fn).lower(*args)
+
+    def instrumented(self, batch, on_time: Callable[[float], None],
+                     donate: bool = False):
+        """Telemetry hook: a ``compiled(...)`` executable that reports its
+        blocked wall-clock.
+
+        Returns a callable with the step signature that runs the jitted
+        step, blocks until every output is ready, and passes the elapsed
+        seconds to ``on_time`` before returning the outputs.  This is the
+        convenience wrapper for drivers that build their own loop; the
+        ``Trainer`` performs the equivalent inline timing itself (its jit
+        cache is keyed per scheme) and feeds the same blocked wall-clock
+        into the `repro.tune` step-cost calibration.
+        """
+        fn = self.compiled(batch, donate=donate)
+
+        def timed(*args):
+            t0 = time.perf_counter()
+            out = fn(*args)
+            jax.block_until_ready(out)
+            on_time(time.perf_counter() - t0)
+            return out
+
+        return timed
 
     def step_inputs(self, stragglers=()) -> dict[str, jax.Array]:
         """Drop-pattern hook: device-ready `W`/`mask`/`rho` for a straggler

@@ -1,10 +1,26 @@
 """High-level training driver: wires the data pipeline, coded step, straggler
-simulation, and (optional) checkpointing into a run loop.
+simulation, telemetry, and (optional) checkpointing + auto-tuning into a run
+loop.
 
 Stragglers: each step draws a straggler set (up to the code's s) from a
 configurable process (none / fixed / random), computes the host-side float64
 decode weights for that responder pattern, and feeds them to the jitted step
 (the device graph is static across patterns).
+
+Auto-tuning (``autotune=AutotunePolicy(...)``): the trainer records per-step
+telemetry — per-worker compute/communication durations from the ``injector``
+(a ``(step, code) -> WorkerTimes`` callable such as
+``repro.tune.DriftingSampler``; on a real cluster, worker heartbeats), the
+induced straggler set, and the measured step wall-clock — and every
+``policy.interval`` steps refits the Section-VI shifted-exponential model
+and re-ranks the feasible (d, s, m) x schedule x packed space
+(``repro.tune``).  When the winning plan beats the active one past the
+hysteresis margin the trainer swaps codecs in place: code, schedule, wire
+format and batcher are replaced, and both the ``StepArtifacts`` and the
+jitted executables are held in caches keyed by the scheme signature, so
+switching back to a previously used scheme reuses its compiled step instead
+of retracing.  ``partial=True`` is preserved across swaps (every cached
+artifact is built in the trainer's partial mode).
 """
 from __future__ import annotations
 
@@ -12,7 +28,7 @@ import dataclasses
 import json
 import pathlib
 import time
-from typing import Any, Iterator
+from typing import Any, Callable, Iterator
 
 import jax
 import jax.numpy as jnp
@@ -20,7 +36,7 @@ import numpy as np
 
 from repro.coding import make_step_inputs
 from repro.compat import set_mesh
-from repro.core import GradCode
+from repro.core import GradCode, make_code, make_hetero_code
 from repro.data import CodedBatcher
 from repro.optim import Optimizer
 
@@ -39,17 +55,25 @@ class Trainer:
     partial: bool = False              # partial-recovery decode past s
     straggler_mode: str = "none"       # none | random | fixed
     fixed_stragglers: tuple = ()
+    injector: Callable | None = None   # (step, code) -> WorkerTimes telemetry
+    autotune: Any | None = None        # repro.tune.AutotunePolicy
     seed: int = 0
     checkpoint_dir: str | None = None
     checkpoint_every: int = 0
 
     def __post_init__(self):
         from repro.models import api as model_api
-        self.arts = make_coded_train_step(self.cfg, self.code, self.mesh,
-                                          self.optimizer, schedule=self.schedule,
-                                          backend=self.backend,
-                                          packed=self.packed,
-                                          partial=self.partial)
+        if self.autotune is not None and self.injector is None:
+            raise ValueError(
+                "autotune needs per-worker timings: pass injector= (e.g. a "
+                "repro.tune.ShiftedExpSampler, or a cluster heartbeat feed)")
+        if self.injector is not None and self.straggler_mode != "none":
+            raise ValueError(
+                "injector= is its own straggler source (the slowest s "
+                "workers of each draw are dropped); it cannot be combined "
+                f"with straggler_mode={self.straggler_mode!r}")
+        self._arts_cache: dict[tuple, Any] = {}
+        self.arts = self._get_arts(self.code, self.schedule, self.packed)
         self.batcher = CodedBatcher(self.code)
         key = jax.random.PRNGKey(self.seed)
         with set_mesh(self.mesh):
@@ -58,6 +82,16 @@ class Trainer:
         self._jitted = {}
         self._rng = np.random.default_rng(self.seed + 1)
         self._step_count = 0
+        self._tuner = None
+        self.telemetry = None
+        if self.autotune is not None:
+            from repro.tune import Autotuner
+            self._tuner = Autotuner(self.autotune,
+                                    current=self._current_plan())
+            self.telemetry = self._tuner.telemetry
+        elif self.injector is not None:
+            from repro.tune import TelemetryLog
+            self.telemetry = TelemetryLog()
         self._ckpt = None
         if self.checkpoint_dir:
             from repro.checkpoint import CheckpointManager
@@ -70,6 +104,72 @@ class Trainer:
                     self.params = jax.tree.map(jnp.asarray, state["params"])
                     self.opt_state = jax.tree.map(jnp.asarray, state["opt_state"])
                 self._step_count = int(meta.get("step", 0))
+
+    # ------------------------------------------------------- codec swapping
+    @staticmethod
+    def _code_key(code) -> tuple:
+        """Hashable scheme identity for the artifact/executable caches."""
+        from repro.tune import scheme_k, scheme_loads
+        return (type(code).__name__, code.n, code.d, code.s, code.m,
+                scheme_k(code), scheme_loads(code),
+                getattr(code, "kind", ""), getattr(code, "seed", 0))
+
+    @property
+    def _scheme_sig(self) -> tuple:
+        return (self._code_key(self.code), self.schedule, self.packed)
+
+    def _get_arts(self, code, schedule: str, packed: bool):
+        """StepArtifacts for a scheme, built once per signature (the compile
+        cache's first layer; the jitted executables are the second)."""
+        key = (self._code_key(code), schedule, packed, self.partial)
+        if key not in self._arts_cache:
+            self._arts_cache[key] = make_coded_train_step(
+                self.cfg, code, self.mesh, self.optimizer,
+                schedule=schedule, backend=self.backend, packed=packed,
+                partial=self.partial)
+        return self._arts_cache[key]
+
+    def _current_plan(self):
+        """The active scheme as a `repro.tune.Plan` (seed for hysteresis)."""
+        from repro.tune import Plan, scheme_k, scheme_loads
+        k = scheme_k(self.code)
+        loads = scheme_loads(self.code)
+        fam = ("uniform" if k == self.code.n and len(set(loads)) == 1
+               else "hetero")
+        return Plan(family=fam, d=self.code.d, s=self.code.s, m=self.code.m,
+                    k=k, loads=loads, schedule=self.schedule,
+                    packed=self.packed, predicted_wait_s=0.0,
+                    predicted_step_s=0.0, predicted_total_s=0.0)
+
+    def _code_for_plan(self, plan):
+        """Materialise the scheme object a ranked plan selects."""
+        if plan.family == "uniform":
+            return make_code(plan.k, plan.d, plan.s, plan.m)
+        # hetero plans re-derive the load assignment from the fitted speed
+        # vector (plan_hetero is deterministic, so the loads match the plan)
+        assert self._tuner is not None and self._tuner.last_fit is not None
+        return make_hetero_code(self._tuner.last_fit.speeds, plan.s, plan.m,
+                                k=plan.k)
+
+    def _apply_plan(self, plan) -> None:
+        """Swap the active codec in place (code, schedule, wire, batcher)."""
+        code = self._code_for_plan(plan)
+        self.code = code
+        self.schedule = plan.schedule
+        self.packed = plan.packed
+        self.arts = self._get_arts(code, plan.schedule, plan.packed)
+        self.batcher = CodedBatcher(code)
+
+    @property
+    def autotune_events(self) -> list[dict]:
+        """The tuner's decision log (empty when autotune is off)."""
+        return [] if self._tuner is None else self._tuner.events
+
+    @property
+    def cached_schemes(self) -> int:
+        """Number of distinct scheme signatures with built step artifacts
+        (the compile cache's population — revisits don't rebuild)."""
+        return len(self._arts_cache)
 
     def maybe_checkpoint(self, force: bool = False) -> None:
         if self._ckpt is None:
@@ -93,24 +193,55 @@ class Trainer:
         placed = self.batcher.place(batch)
         shapes = jax.tree.map(
             lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), placed)
-        keyshape = tuple(sorted((k, v.shape) for k, v in placed.items()))
-        if keyshape not in self._jitted:
+        keyshape = (self._scheme_sig,
+                    tuple(sorted((k, v.shape) for k, v in placed.items())))
+        fresh = keyshape not in self._jitted
+        if fresh:
             smapped, in_specs, _ = self.arts.step(shapes)
             self._jitted[keyshape] = jax.jit(smapped, donate_argnums=(0, 1))
         fn = self._jitted[keyshape]
-        inp = make_step_inputs(self.code, self._stragglers(),
-                               partial=self.partial)
+        times = None
+        if self.injector is not None:
+            times = self.injector(self._step_count, self.code)
+            stragglers, _ = times.order_stat(self.code.s)
+            stragglers = list(stragglers)
+        else:
+            stragglers = self._stragglers()
+        inp = make_step_inputs(self.code, stragglers, partial=self.partial)
         args = [jnp.asarray(inp["W"]), jnp.asarray(inp["mask"]),
                 jnp.asarray(inp["rho"])]
         if self.partial:
             args.append(jnp.asarray(inp["err_factor"]))
+        t0 = time.perf_counter()
         with set_mesh(self.mesh):
             self.params, self.opt_state, metrics = fn(
                 self.params, self.opt_state,
                 jax.tree.map(jnp.asarray, placed), *args)
+        jax.block_until_ready(metrics)
+        wall = time.perf_counter() - t0
+        out = {k: float(v[0]) for k, v in metrics.items()}
+        if times is not None:
+            from repro.tune import record_from_times
+            # a fresh executable's first call pays one-time trace+compile:
+            # keep it out of the step-cost calibration (measured_step_s <= 0
+            # is ignored by StepCostBook) while still recording the worker
+            # timings the estimator fits on; the returned "step_time_s"
+            # stays the real wall either way
+            rec = record_from_times(self._step_count, self.code,
+                                    self.schedule, self.packed, times,
+                                    measured_step_s=0.0 if fresh else wall)
+            out["step_time_s"] = wall
+            out["modeled_wait_s"] = rec.wait_s
+            if self._tuner is not None:
+                self._tuner.record(rec)
+                new_plan = self._tuner.maybe_replan(self._step_count)
+                if new_plan is not None:
+                    self._apply_plan(new_plan)
+            elif self.telemetry is not None:
+                self.telemetry.append(rec)
         self._step_count += 1
         self.maybe_checkpoint()
-        return {k: float(v[0]) for k, v in metrics.items()}
+        return out
 
     def run(self, stream: Iterator[dict[str, np.ndarray]], steps: int,
             log_every: int = 10, log_path: str | None = None) -> list[dict]:

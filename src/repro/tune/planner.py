@@ -1,0 +1,241 @@
+"""Plan search: rank the reachable operating points under a fitted model.
+
+Given a :class:`~repro.tune.estimator.FitResult` the planner scores every
+reachable configuration
+
+    (d, s, m) on the optimal frontier  x  schedule  x  packed  x  family
+
+and returns a ranked list of :class:`Plan`.  Each plan's predicted cost is
+
+    predicted_total_s = predicted_wait_s + predicted_step_s
+
+where ``predicted_wait_s`` is the cluster wait under the fitted straggler
+model — the analytic ``E[T_tot]`` order-statistic integral
+(:func:`~repro.core.runtime_model.expected_total_runtime`) for uniform
+triples, a Monte-Carlo mean (:func:`~repro.bench.straggler.
+draw_patterns_hetero`, which reduces to the same model) for
+heterogeneous-load plans — and ``predicted_step_s`` calibrates in the
+*measured* wall-clock of the jitted step from telemetry: the mean observed
+step time per ``(schedule, packed)`` configuration
+(:func:`step_cost_book`), falling back to the cheapest observed
+configuration for ones not yet tried.  Modeled wait and measured step cost
+live on the same axis (seconds), so the calibration is a straight sum.
+
+Heterogeneous plans enter the ranking only when the fitted speed spread
+clears the policy threshold (on a homogeneous cluster they cannot beat the
+uniform scheme and only add Monte-Carlo noise) or when explicitly forced.
+
+The deterministic anchor: fed the paper's n=8 Section VI-A constants, the
+top uniform plan is the paper's optimum ``(d, s, m) = (4, 1, 3)``
+(``tests/test_tune.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.bench.straggler import draw_patterns_hetero, mean_wait_s
+from repro.core.hetero import plan_hetero
+from repro.core.runtime_model import expected_total_runtime
+
+from .estimator import FitResult
+from .telemetry import StepRecord
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """One ranked operating point: scheme + schedule + wire format + cost."""
+
+    family: str                 # "uniform" | "hetero"
+    d: int                      # computation load (max per-worker for hetero)
+    s: int                      # straggler budget
+    m: int                      # communication reduction
+    k: int                      # data subsets (n for uniform)
+    loads: tuple[int, ...]      # per-worker subset counts
+    schedule: str               # gather | a2a
+    packed: bool                # bucketed wire vs per-leaf collectives
+    predicted_wait_s: float     # modeled cluster wait under the fit
+    predicted_step_s: float     # calibrated measured step cost
+    predicted_total_s: float    # wait + step: the ranking key
+
+    @property
+    def scheme_key(self) -> tuple:
+        """Hashable identity of the codec this plan selects (sans costs)."""
+        return (self.family, self.d, self.s, self.m, self.k, self.loads,
+                self.schedule, self.packed)
+
+    def describe(self) -> str:
+        """One-line human-readable summary."""
+        extra = f",loads={list(self.loads)},k={self.k}" \
+            if self.family == "hetero" else ""
+        return (f"{self.family}(d={self.d},s={self.s},m={self.m}"
+                f"{extra}),{self.schedule},"
+                f"{'packed' if self.packed else 'per-leaf'}: "
+                f"E[T]={self.predicted_total_s:.3f}s "
+                f"(wait {self.predicted_wait_s:.3f} "
+                f"+ step {self.predicted_step_s:.4f})")
+
+
+class StepCostBook:
+    """Measured step-cost calibration, load-aware.
+
+    Built from telemetry records with a positive measured wall-clock
+    (synthetic windows carry none).  Lookup order for a candidate plan:
+
+    1. **exact**: the mean measurement of the identical scheme
+       ``(d, k, loads, schedule, packed)``;
+    2. **per-config, per-load**: mean of ``measured / d`` over the
+       candidate's ``(schedule, packed)`` config, scaled by the
+       candidate's ``d`` — a d=1 candidate is not charged the wall-clock
+       of the d=4 step that produced the telemetry;
+    3. **global per-load**: the same ratio pooled over every config
+       (optimistic for untried schedules, so they can win the ranking and
+       get measured next);
+    4. 0.0 when no measurements exist at all.
+    """
+
+    def __init__(self, records: Sequence[StepRecord] = ()):
+        """Pool the positive measurements of ``records`` into the book."""
+        exact: dict[tuple, list[float]] = {}
+        per_cfg: dict[tuple[str, bool], list[float]] = {}
+        per_load: list[float] = []
+        for r in records:
+            if r.measured_step_s <= 0:
+                continue
+            exact.setdefault(
+                (r.d, r.k, tuple(r.loads), r.schedule, r.packed),
+                []).append(r.measured_step_s)
+            per_cfg.setdefault((r.schedule, r.packed), []).append(
+                r.measured_step_s / max(r.d, 1))
+            per_load.append(r.measured_step_s / max(r.d, 1))
+        self._exact = {k: float(np.mean(v)) for k, v in exact.items()}
+        self._per_cfg = {k: float(np.mean(v)) for k, v in per_cfg.items()}
+        self._global = float(np.mean(per_load)) if per_load else 0.0
+
+    def __len__(self) -> int:
+        """Number of exactly-measured scheme signatures."""
+        return len(self._exact)
+
+    def cost(self, d: int, k: int, loads: tuple[int, ...], schedule: str,
+             packed: bool) -> float:
+        """Predicted measured-step seconds for a candidate scheme."""
+        key = (d, k, tuple(loads), schedule, packed)
+        if key in self._exact:
+            return self._exact[key]
+        cfg = self._per_cfg.get((schedule, packed))
+        return (cfg if cfg is not None else self._global) * max(d, 1)
+
+
+def step_cost_book(records: Sequence[StepRecord]) -> StepCostBook:
+    """Build the :class:`StepCostBook` calibration from a telemetry window."""
+    return StepCostBook(records)
+
+
+def _hetero_wait(fit: FitResult, loads, k: int, s: int, m: int,
+                 mc_iters: int, seed: int) -> float:
+    """Monte-Carlo mean wait of a hetero plan under the fitted model,
+    including the per-worker shift constants (comparable to E[T_tot])."""
+    pats = draw_patterns_hetero(fit.params, loads, k, s, m, mc_iters,
+                                speeds=fit.speeds, seed=seed)
+    return mean_wait_s(pats)
+
+
+def score_plan(fit: FitResult, plan: Plan,
+               cost_book: StepCostBook | None = None,
+               mc_iters: int = 400, npts: int = 20_000,
+               seed: int = 0) -> Plan:
+    """Re-score an existing plan under a (new) fit: returns a copy with
+    fresh ``predicted_*`` fields.
+
+    The control loop uses this to price the *active* plan against the
+    ranked candidates even when the active scheme falls outside the
+    current search space (e.g. a hetero plan after the fitted speed
+    spread dropped back below the threshold) — hysteresis must always
+    compare against a like-for-like prediction, never default to
+    switching.
+    """
+    book = cost_book or StepCostBook()
+    if plan.family == "uniform":
+        wait = expected_total_runtime(fit.params, plan.d, plan.s, plan.m,
+                                      npts=npts)
+    else:
+        wait = _hetero_wait(fit, plan.loads, plan.k, plan.s, plan.m,
+                            mc_iters, seed)
+    step = book.cost(plan.d, plan.k, plan.loads, plan.schedule, plan.packed)
+    return dataclasses.replace(plan, predicted_wait_s=wait,
+                               predicted_step_s=step,
+                               predicted_total_s=wait + step)
+
+
+def rank_plans(fit: FitResult, *,
+               schedules: Sequence[str] = ("gather", "a2a"),
+               families: Sequence[str] = ("uniform",),
+               packed_options: Sequence[bool] = (True,),
+               cost_book: StepCostBook | None = None,
+               min_s: int = 0,
+               hetero_threshold: float = 1.15,
+               hetero_k_factor: int = 4,
+               mc_iters: int = 400,
+               npts: int = 20_000,
+               seed: int = 0) -> list[Plan]:
+    """Score and rank every reachable plan under a fitted straggler model.
+
+    ``min_s`` floors the straggler budget (a production cluster usually
+    insists on ``s >= 1`` even when the model momentarily says stragglers
+    are cheap).  ``hetero_threshold`` gates the hetero family on the fitted
+    ``speed_spread``; ``"hetero!"`` in ``families`` forces it regardless.
+    Ties (e.g. two schedules with no measurements yet) break
+    deterministically toward the earlier entry in ``schedules`` /
+    ``packed_options``.
+    """
+    n = fit.params.n
+    book = cost_book or StepCostBook()
+
+    candidates: list[tuple] = []     # (total, tiebreak, Plan)
+    sched_rank = {sc: i for i, sc in enumerate(schedules)}
+    packed_rank = {pk: i for i, pk in enumerate(packed_options)}
+
+    def add(family, d, s, m, k, loads, wait):
+        for schedule in schedules:
+            for packed in packed_options:
+                step = book.cost(d, k, loads, schedule, packed)
+                candidates.append((
+                    wait + step,
+                    (sched_rank[schedule], packed_rank[packed]),
+                    Plan(family=family, d=d, s=s, m=m, k=k, loads=loads,
+                         schedule=schedule, packed=packed,
+                         predicted_wait_s=wait, predicted_step_s=step,
+                         predicted_total_s=wait + step)))
+
+    if "uniform" in families:
+        for d in range(1, n + 1):
+            for m in range(1, d + 1):
+                s = d - m
+                if s < min_s:
+                    continue
+                wait = expected_total_runtime(fit.params, d, s, m, npts=npts)
+                add("uniform", d, s, m, n, (d,) * n, wait)
+
+    want_hetero = ("hetero!" in families
+                   or ("hetero" in families
+                       and fit.speed_spread >= hetero_threshold))
+    if want_hetero:
+        k = hetero_k_factor * n
+        for r in range(2, n + 1):            # replication s + m
+            for m in range(1, r + 1):
+                s = r - m
+                if s < max(min_s, 1):
+                    continue                  # hetero needs a real budget
+                try:
+                    plan = plan_hetero(fit.speeds, s, m, k=k)
+                except ValueError:
+                    continue
+                wait = _hetero_wait(fit, plan.loads, plan.k, s, m,
+                                    mc_iters, seed)
+                add("hetero", max(plan.loads), s, m, plan.k,
+                    tuple(plan.loads), wait)
+
+    candidates.sort(key=lambda c: (c[0], c[1]))
+    return [c[2] for c in candidates]

@@ -16,6 +16,8 @@ MODULES = [
     "repro.coding.plan",
     "repro.coding.packing",
     "repro.bench.straggler",
+    "repro.tune.telemetry",
+    "repro.tune.estimator",
 ]
 
 

@@ -8,11 +8,13 @@ Checks, over the `docs/` tree and `mkdocs.yml`:
      (anchors and external http(s)/mailto links are skipped);
   3. every `::: module.path` mkdocstrings directive imports;
   4. docstring coverage: every public symbol re-exported by
-     ``repro.coding.__all__`` and ``repro.bench.__all__`` has a nonempty
-     docstring, and an AST-level scan of ``src/repro/coding/*.py`` +
-     ``src/repro/train/coded_step.py`` finds no undocumented public
-     module/class/function/method (the local mirror of the ruff ``D1``
-     rule scoped in pyproject.toml).
+     ``repro.coding.__all__``, ``repro.bench.__all__`` and
+     ``repro.tune.__all__`` has a nonempty docstring, and an AST-level
+     scan of ``src/repro/coding/*.py`` + ``src/repro/tune/*.py`` +
+     ``src/repro/train/coded_step.py`` + the documented ``repro.core``
+     modules (hetero, runtime_model, tradeoff, stability) finds no
+     undocumented public module/class/function/method (the local mirror
+     of the ruff ``D1`` rule scoped in pyproject.toml).
 
 Exit code 0 = clean; nonzero prints each failure on its own line.
 
@@ -30,10 +32,17 @@ ROOT = pathlib.Path(__file__).resolve().parents[1]
 DOCS = ROOT / "docs"
 
 # the pydocstyle-enforced scope (mirror of pyproject's scoped ruff D1 rule)
-DOCSTRING_SCOPE = sorted((ROOT / "src/repro/coding").glob("*.py")) + [
-    ROOT / "src/repro/train/coded_step.py",
-    ROOT / "src/repro/core/hetero.py",
-]
+DOCSTRING_SCOPE = (
+    sorted((ROOT / "src/repro/coding").glob("*.py"))
+    + sorted((ROOT / "src/repro/tune").glob("*.py"))
+    + [
+        ROOT / "src/repro/train/coded_step.py",
+        ROOT / "src/repro/core/hetero.py",
+        ROOT / "src/repro/core/runtime_model.py",
+        ROOT / "src/repro/core/tradeoff.py",
+        ROOT / "src/repro/core/stability.py",
+    ]
+)
 
 _LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 _DIRECTIVE = re.compile(r"^::: ([\w.]+)\s*$", re.M)
@@ -75,7 +84,7 @@ def check_directives(errors: list[str]) -> None:
 
 def check_public_api_docstrings(errors: list[str]) -> None:
     """Every re-exported public symbol carries a nonempty docstring."""
-    for modname in ("repro.coding", "repro.bench"):
+    for modname in ("repro.coding", "repro.bench", "repro.tune"):
         mod = importlib.import_module(modname)
         for name in getattr(mod, "__all__", []):
             obj = getattr(mod, name, None)
