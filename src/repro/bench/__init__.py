@@ -25,7 +25,9 @@ from .straggler import (
     StragglerPattern,
     draw_patterns,
     draw_patterns_hetero,
+    draw_patterns_overlapped,
     mean_wait_s,
+    overlap_fraction,
 )
 from .timing import TimerPolicy, TimingStats, time_callable, time_sequence
 
@@ -40,10 +42,12 @@ __all__ = [
     "capture_env",
     "draw_patterns",
     "draw_patterns_hetero",
+    "draw_patterns_overlapped",
     "get_spec",
     "load_results",
     "mean_wait_s",
     "names",
+    "overlap_fraction",
     "register",
     "time_callable",
     "time_sequence",

@@ -119,6 +119,50 @@ def draw_patterns_hetero(
     return _patterns_from_times(comp + comm, n, s if n_drop is None else n_drop)
 
 
+def draw_patterns_overlapped(
+    params: RuntimeParams,
+    d: int,
+    s: int,
+    m: int,
+    iters: int,
+    seed: int = 0,
+) -> list[StragglerPattern]:
+    """Steady-state draws for the *pipelined* step: worker `i`'s cycle time
+    is `max(comp_i, comm_i)` — its step-t collective overlaps its step-(t+1)
+    compute — so each pattern's wait is the `(n-s)`-th order statistic of
+    the per-worker max instead of the sum.  The Monte-Carlo twin of
+    `repro.core.runtime_model.expected_total_runtime_overlapped` (same
+    component distributions as `draw_patterns`, same seeding layout).
+    """
+    rng = np.random.default_rng(seed)
+    n = params.n
+    comp = d * (params.t1 + rng.exponential(1.0 / params.lambda1, (iters, n)))
+    comm = (params.t2 + rng.exponential(1.0 / params.lambda2, (iters, n))) / m
+    return _patterns_from_times(np.maximum(comp, comm), n, s)
+
+
+def overlap_fraction(comp_phase_s: float, comm_phase_s: float,
+                     pipelined_total_s: float) -> float:
+    """How much of the achievable compute/communication overlap the
+    pipelined step realises, in [0, 1].
+
+    With per-step phase totals `comp` and `comm`, a fully sequential step
+    costs `comp + comm` and a perfectly overlapped one `max(comp, comm)`;
+    the fraction locates the measured pipelined total between the two:
+
+        (comp + comm - pipelined) / (comp + comm - max(comp, comm))
+
+    clipped to [0, 1] (measurement noise can land the pipelined total just
+    outside the ideal bracket).  Degenerate phases (`min(comp, comm) <= 0`,
+    nothing to hide) return 0.0.
+    """
+    seq = comp_phase_s + comm_phase_s
+    ideal = max(comp_phase_s, comm_phase_s)
+    if min(comp_phase_s, comm_phase_s) <= 0.0 or seq <= ideal:
+        return 0.0
+    return float(np.clip((seq - pipelined_total_s) / (seq - ideal), 0.0, 1.0))
+
+
 def mean_wait_s(patterns: list[StragglerPattern]) -> float:
     """Mean modeled master wait across patterns (seconds)."""
     return float(np.mean([p.wait_s for p in patterns]))

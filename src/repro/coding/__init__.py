@@ -17,8 +17,8 @@ from .codec import Codec, decode_tree, encode_leaf, encode_tree, make_codec
 from .inputs import coding_worker_index, make_step_inputs, uncovered_subsets
 from .layout import groups_to_leaf, leaf_to_groups
 from .packing import (WIRE_ALIGN, LeafSlot, PackPlan, WireBucket, enc_shape,
-                      make_pack_plan, pack_bucket, psum_fallback,
-                      unpack_bucket)
+                      make_pack_plan, pack_bucket, pack_param_groups,
+                      psum_fallback, unpack_bucket, unpack_param_groups)
 from .plan import LeafPlan, coded_fraction, plan_leaf, plan_tree
 from .schedules import (SCHEDULES, AllToAllSchedule, GatherSchedule,
                         PsumSchedule, Schedule, decode_leaf_a2a,
@@ -34,7 +34,7 @@ __all__ = [
     "LeafPlan", "plan_leaf", "plan_tree", "coded_fraction",
     "PackPlan", "WireBucket", "LeafSlot", "WIRE_ALIGN",
     "make_pack_plan", "pack_bucket", "unpack_bucket", "psum_fallback",
-    "enc_shape",
+    "pack_param_groups", "unpack_param_groups", "enc_shape",
     "encode_leaf", "encode_tree", "decode_tree",
     "decode_leaf_gather", "decode_leaf_a2a",
     "all_gather_wire", "all_to_all_wire",

@@ -45,6 +45,29 @@ class CodecBackend:
         """Decode contraction: F (n, V[, R]) x W (n, m) -> (V, m[, R])."""
         raise NotImplementedError
 
+    def encode_acc(self, acc: jax.Array, G: jax.Array,
+                   C: jax.Array) -> jax.Array:
+        """Accumulating encode: ``acc + encode(G, C)`` with acc (V[, R]) f32.
+
+        The pipelined step's fused-encode fold — one call per (subset, leaf)
+        writes straight into the 128-aligned wire-bucket accumulator slot
+        instead of materialising the per-leaf encoding for a later pack
+        copy.  Must be bit-identical to the two-step spelling.
+        """
+        raise NotImplementedError
+
+    def decode_apply(self, F: jax.Array, W: jax.Array, P: jax.Array,
+                     MU: jax.Array, *, lr: float, momentum: float,
+                     scale: float):
+        """Fused decode + SGD-momentum apply over one packed bucket.
+
+        F (n, L) x W (n, m) -> g = scale * decode; then
+        ``mu' = momentum * MU + g``, ``p' = P - lr * mu'`` on the (L, m)
+        f32 bucket-layout views.  Returns ``(p', mu', sum(g*g))`` — the
+        gradient-norm partial rides along so the step never rebuilds g.
+        """
+        raise NotImplementedError
+
 
 @dataclasses.dataclass(frozen=True)
 class RefBackend(CodecBackend):
@@ -66,6 +89,16 @@ class RefBackend(CodecBackend):
         return jnp.einsum(sub, F.astype(jnp.float32),
                           W.astype(jnp.float32)).astype(out_dtype)
 
+    def encode_acc(self, acc, G, C):
+        """``acc + encode(G, C)`` — XLA fuses the add into the contraction."""
+        return acc + self.encode(G, C, out_dtype=jnp.float32)
+
+    def decode_apply(self, F, W, P, MU, *, lr, momentum, scale):
+        """Decode einsum + elementwise SGD-momentum apply (see interface)."""
+        g = self.decode(F, W, out_dtype=jnp.float32) * scale
+        mu = momentum * MU + g
+        return P - lr * mu, mu, jnp.sum(g * g)
+
 
 @dataclasses.dataclass(frozen=True)
 class PallasBackend(CodecBackend):
@@ -84,6 +117,19 @@ class PallasBackend(CodecBackend):
         """Decode via the ``coded_decode`` Pallas kernel."""
         return _decode_mod.coded_decode(F, W, interpret=self.interpret,
                                         out_dtype=out_dtype)
+
+    def encode_acc(self, acc, G, C):
+        """Accumulate via the ``coded_encode_acc`` Pallas kernel (in-place
+        through ``input_output_aliases``)."""
+        return _encode_mod.coded_encode_acc(acc, G, C,
+                                            interpret=self.interpret)
+
+    def decode_apply(self, F, W, P, MU, *, lr, momentum, scale):
+        """Fuse via the ``coded_decode_apply`` Pallas kernel."""
+        pn, mun, ss = _decode_mod.coded_decode_apply(
+            F, W, P, MU, lr=lr, momentum=momentum, scale=scale,
+            interpret=self.interpret)
+        return pn, mun, ss[0, 0]
 
 
 def _on_tpu() -> bool:

@@ -21,6 +21,7 @@ error certificate).
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import TYPE_CHECKING, Any
 
 import jax
@@ -31,7 +32,8 @@ if TYPE_CHECKING:  # annotation-only: keeps repro.coding import-independent
 
 from .backends import CodecBackend, RefBackend, resolve_backend
 from .layout import flatten_rest, leaf_to_groups, unflatten_rest
-from .packing import PackPlan, make_pack_plan, pack_bucket, unpack_bucket
+from .packing import (PackPlan, make_pack_plan, pack_bucket,
+                      pack_param_groups, unpack_bucket, unpack_param_groups)
 from .plan import LeafPlan, coded_fraction, plan_tree
 from .schedules import Schedule, get_schedule
 
@@ -126,6 +128,33 @@ class Codec:
         x = jnp.moveaxis(jnp.zeros(p.shape, jnp.float32), plan.group_dim, 0)
         return jnp.zeros((x.shape[0] // self.code.m, *x.shape[1:]), jnp.float32)
 
+    # ---- fused encode (encode straight into the wire layout)
+    def bucket_acc_zeros(self, pplan: PackPlan) -> list[jax.Array]:
+        """Flat f32 zero accumulators, one per wire bucket — the fused
+        encode fold's carry.  Alignment gaps and the n-divisible tail are
+        never written, so they stay exactly zero on the wire (matching
+        ``pack_bucket``'s explicit zero padding bit-for-bit)."""
+        return [jnp.zeros((b.size,), jnp.float32) for b in pplan.buckets]
+
+    def encode_into(self, buf: jax.Array, g: jax.Array, coef: jax.Array,
+                    slot) -> jax.Array:
+        """Fold one subset's gradient leaf straight into its bucket slot:
+        ``buf[slot] += encode(g, coef)`` via the backend's accumulating
+        encode, skipping the materialise-then-pack copy of the sync path.
+        ``g`` must already be f32 (the fold accumulates in f32, exactly like
+        the per-leaf path's ``encoding_zero`` carry); returns the updated
+        flat buffer."""
+        m = coef.shape[0]
+        x = leaf_to_groups(g, slot.plan, m)             # (V, m, *rest)
+        rest = x.shape[2:]
+        G = flatten_rest(x, 2)[None]                    # (1, V, m[, R])
+        acc = jax.lax.slice_in_dim(buf, slot.offset, slot.offset + slot.size)
+        if rest:
+            acc = acc.reshape(slot.enc_shape[0], math.prod(rest))
+        acc = self.backend.encode_acc(acc, G, coef.reshape(1, m))
+        return buf.at[slot.offset:slot.offset + slot.size].set(
+            acc.reshape(-1))
+
     # ---- wire
     def to_wire(self, e: jax.Array, mask_i: jax.Array) -> jax.Array:
         """Mask the straggler payload (transmits nothing) + cast to the wire."""
@@ -151,6 +180,22 @@ class Codec:
         out: dict[int, jax.Array] = {}
         for dec, b in zip(decoded_bufs, pplan.buckets):
             out.update(unpack_bucket(dec, b))
+        return out
+
+    def pack_params(self, flat_leaves, pplan: PackPlan) -> list[jax.Array]:
+        """Param/momentum leaves -> one (L, m) f32 bucket-layout view per
+        bucket, row-aligned with the decoded gradient buffers (the fused
+        decode-plus-apply operands; see ``packing.pack_param_groups``)."""
+        return [pack_param_groups(flat_leaves, b, self.code.m)
+                for b in pplan.buckets]
+
+    def unpack_params(self, bufs, pplan: PackPlan,
+                      flat_like) -> dict[int, jax.Array]:
+        """Updated (L, m) buffers -> {leaf_index: leaf}, cast back to each
+        leaf's dtype (``flat_like`` supplies the originals)."""
+        out: dict[int, jax.Array] = {}
+        for buf, b in zip(bufs, pplan.buckets):
+            out.update(unpack_param_groups(buf, b, flat_like))
         return out
 
     # ---- decode
@@ -187,6 +232,18 @@ class Codec:
         return self.schedule.decode_packed(buf, W, axis_names, self.code.n,
                                            self.backend, W_row=W_row,
                                            emulate=emulate)
+
+    def decode_apply_packed(self, buf: jax.Array, W: jax.Array, P: jax.Array,
+                            MU: jax.Array, axis_names, *, lr: float,
+                            momentum: float, scale: float,
+                            W_row: jax.Array | None = None,
+                            emulate: bool = False):
+        """One bucket's collective + fused decode-and-SGD-momentum apply on
+        its (L, m) param/momentum views: returns (p', mu', sum(g*g)).  See
+        ``Schedule.decode_apply_packed``."""
+        return self.schedule.decode_apply_packed(
+            buf, W, P, MU, axis_names, self.code.n, self.backend, lr=lr,
+            momentum=momentum, scale=scale, W_row=W_row, emulate=emulate)
 
 
 def make_codec(code: GradCode, *, schedule: str | Schedule = "gather",

@@ -34,6 +34,7 @@ schedule's ``recv_elems_per_worker`` prediction.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Any, Sequence
 
@@ -41,7 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .layout import groups_to_leaf
+from .layout import groups_to_leaf, leaf_to_groups
 from .plan import LeafPlan
 
 PyTree = Any
@@ -110,6 +111,7 @@ class WireBucket:
         """Zero elements added for alignment and the n-divisible tail."""
         return self.size - self.unpadded
 
+    @functools.lru_cache(maxsize=None)
     def worker_chunk_slots(self, n: int) -> tuple[tuple, ...]:
         """Ragged per-worker view of the a2a chunking of this bucket.
 
@@ -121,6 +123,10 @@ class WireBucket:
         that leaf's flattened-encoding coordinates.  The union over workers
         tiles every slot exactly once (asserted in tests) — the accounting
         used to attribute per-worker decode work under heterogeneous loads.
+
+        Memoized (the dataclass is frozen and hashable): the O(n * slots)
+        scan runs at Python trace time inside every step (re)trace and the
+        tuning loop asks for the same (bucket, n) pair constantly.
         """
         assert self.size % n == 0, f"bucket size {self.size} not n={n}-divisible"
         chunk = self.size // n
@@ -257,6 +263,41 @@ def psum_fallback(flat_leaves: Sequence[jax.Array], flat_plans,
             flat_leaves[i].shape)
         off += sz
     return out
+
+
+def pack_param_groups(flat_leaves: Sequence[jax.Array],
+                      bucket: WireBucket, m: int) -> jax.Array:
+    """Lay the bucket's *parameter* (or optimizer-state) leaves out in the
+    decoded-buffer layout: an ``(bucket.size, m)`` f32 view whose rows
+    ``[slot.offset, slot.offset + slot.size)`` hold leaf ``slot.leaf_index``
+    exactly where ``unpack_bucket`` reads that leaf's decoded gradient.
+
+    This is the fused decode-plus-apply path's input: with params and
+    momentum in this layout, the per-bucket kernel can run the optimizer
+    update right after the decode contraction without unpacking.  Rows in
+    the alignment gaps and the tail are zeros (their decoded gradient is
+    zero too, so the update fixes them at zero)."""
+    parts: list[jax.Array] = []
+    pos = 0
+    for s in bucket.slots:
+        if s.offset > pos:
+            parts.append(jnp.zeros((s.offset - pos, m), jnp.float32))
+        x = leaf_to_groups(
+            flat_leaves[s.leaf_index].astype(jnp.float32), s.plan, m)
+        parts.append(jnp.moveaxis(x, 1, -1).reshape(s.size, m))
+        pos = s.offset + s.size
+    if bucket.size > pos:
+        parts.append(jnp.zeros((bucket.size - pos, m), jnp.float32))
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+
+
+def unpack_param_groups(buf: jax.Array, bucket: WireBucket,
+                        flat_like: Sequence[Any]) -> dict[int, jax.Array]:
+    """Invert ``pack_param_groups``: slice the updated ``(bucket.size, m)``
+    buffer back into leaf layouts, cast to each leaf's original dtype
+    (``flat_like`` supplies the dtypes).  Returns {leaf_index: leaf}."""
+    out = unpack_bucket(buf, bucket)
+    return {i: v.astype(flat_like[i].dtype) for i, v in out.items()}
 
 
 def unpack_bucket(decoded: jax.Array, bucket: WireBucket) -> dict[int, jax.Array]:

@@ -76,6 +76,30 @@ class Schedule:
         instead of one per leaf."""
         raise NotImplementedError
 
+    def decode_apply_packed(self, buf: jax.Array, W: jax.Array,
+                            P: jax.Array, MU: jax.Array, axis_names, n: int,
+                            backend: CodecBackend, *, lr: float,
+                            momentum: float, scale: float,
+                            W_row: jax.Array | None = None,
+                            emulate: bool = False):
+        """Decode one packed bucket AND apply the SGD-momentum update to its
+        ``(L, m)`` param/momentum views (``packing.pack_param_groups``) in
+        the same pass:
+
+            g = scale * decode(buf);  mu' = momentum * MU + g;  p' = P - lr * mu'
+
+        Returns ``(p', mu', sum(g*g))`` — the sum-of-squares partial feeds
+        the step's gradient-norm metric.  The default spelling composes
+        ``decode_packed`` with elementwise jnp ops (works on every schedule
+        and on the emulated path); schedules whose choreography ends with a
+        full local contraction override it with the backend's fused
+        decode-apply kernel."""
+        dec = self.decode_packed(buf, W, axis_names, n, backend,
+                                 W_row=W_row, emulate=emulate)
+        g = dec * scale
+        mu = momentum * MU + g
+        return P - lr * mu, mu, jnp.sum(g * g)
+
 
 def _decode_psum_emulated(f_leaf, W_row, plan, axis_names, backend):
     """Collective-free decode: every worker weights its own encoding by its W
@@ -124,6 +148,21 @@ class GatherSchedule(Schedule):
             return _decode_packed_emulated(buf, W_row, axis_names, backend)
         gathered = wire.all_gather_wire(buf, axis_names)     # (n, L)
         return backend.decode(gathered, W, out_dtype=jnp.float32)  # (L, m)
+
+    def decode_apply_packed(self, buf, W, P, MU, axis_names, n, backend, *,
+                            lr, momentum, scale, W_row=None, emulate=False):
+        """Fully fused: one all_gather, then the backend's decode-plus-apply
+        over the whole bucket (einsum + momentum + param update in one
+        kernel on the pallas backend).  The emulated path has no local
+        (n, L) stack to hand the kernel — fall back to the base
+        decode-then-elementwise spelling."""
+        if emulate:
+            return Schedule.decode_apply_packed(
+                self, buf, W, P, MU, axis_names, n, backend, lr=lr,
+                momentum=momentum, scale=scale, W_row=W_row, emulate=True)
+        gathered = wire.all_gather_wire(buf, axis_names)     # (n, L)
+        return backend.decode_apply(gathered, W, P, MU, lr=lr,
+                                    momentum=momentum, scale=scale)
 
 
 @dataclasses.dataclass(frozen=True)

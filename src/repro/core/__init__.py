@@ -11,9 +11,12 @@ Public API:
   coded_allreduce                   — DEPRECATED shim over ``repro.coding``
                                       (the codec subsystem: plan / encode /
                                       wire / decode with ref+pallas backends)
+                                      — imported lazily so its
+                                      DeprecationWarning fires only for
+                                      actual users of the old surface
 """
-from . import (coded_allreduce, cyclic, hetero, polynomial, random_code,
-               runtime_model, stability, tradeoff)
+from . import (cyclic, hetero, polynomial, random_code, runtime_model,
+               stability, tradeoff)
 from .hetero import HeteroCode, HeteroPlan, make_hetero_code, plan_hetero
 from .schemes import GradCode, make_code, uncoded
 
@@ -23,3 +26,12 @@ __all__ = [
     "coded_allreduce", "cyclic", "hetero", "polynomial", "random_code",
     "runtime_model", "stability", "tradeoff",
 ]
+
+
+def __getattr__(name: str):
+    # the shim stays reachable as `repro.core.coded_allreduce`, but eager
+    # package import must not trigger (or swallow) its DeprecationWarning
+    if name == "coded_allreduce":
+        import importlib
+        return importlib.import_module(".coded_allreduce", __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

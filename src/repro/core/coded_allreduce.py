@@ -7,7 +7,13 @@ working; new code should ``import repro.coding`` (or ``make_codec``) directly.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Any
+
+warnings.warn(
+    "repro.core.coded_allreduce is a deprecated shim — import the "
+    "plan/encode/wire/decode surface from repro.coding instead",
+    DeprecationWarning, stacklevel=2)
 
 from repro.coding import (  # noqa: F401  (re-exports)
     LeafPlan,

@@ -86,6 +86,71 @@ def expected_total_runtime(params: RuntimeParams, d: int, s: int, m: int,
     return d * params.t1 + params.t2 / m + expected_order_stat(params, d, s, m, npts)
 
 
+def _shifted_exp_cdf(t: np.ndarray, rate: float, shift: float) -> np.ndarray:
+    """CDF of ``shift + Exp(rate)``: 0 below the shift, 1-exp(-rate*(t-shift))
+    above it — the per-phase distribution of the Sec-VI model *including*
+    its deterministic floor (unlike :func:`hypoexp_cdf`, which models only
+    the random parts and leaves the shifts to the caller)."""
+    t = np.asarray(t, dtype=np.float64)
+    return np.where(t >= shift, -np.expm1(-rate * np.maximum(t - shift, 0.0)),
+                    0.0)
+
+
+def _phase_grid(params: RuntimeParams, rate: float, shift: float,
+                npts: int) -> np.ndarray:
+    return np.linspace(0.0,
+                       shift + (math.log(max(params.n, 2)) + 45.0) / rate,
+                       npts)
+
+
+def expected_phase_runtimes(params: RuntimeParams, d: int, s: int, m: int,
+                            npts: int = 200_000) -> tuple[float, float]:
+    """(E[compute wait], E[communication wait]) of a synchronous step.
+
+    Each phase taken alone: the master's compute wait is the (n-s)-th order
+    statistic of ``d*t1 + Exp(lambda1/d)`` across workers, the communication
+    wait the same statistic of ``t2/m + Exp(m*lambda2)``.  The pipelined
+    step's bench composes these with measured encode/drain wall-clocks to
+    form the phase totals behind the gated ``overlap_fraction`` metric.
+    """
+    out = []
+    for rate, shift in ((params.lambda1 / d, d * params.t1),
+                        (m * params.lambda2, params.t2 / m)):
+        grid = _phase_grid(params, rate, shift, npts)
+        F = _shifted_exp_cdf(grid, rate, shift)
+        out.append(_order_stat_mean(F, grid, params.n, params.n - s))
+    return out[0], out[1]
+
+
+def expected_total_runtime_overlapped(params: RuntimeParams, d: int, s: int,
+                                      m: int, npts: int = 200_000,
+                                      eps: float = 0.0) -> float:
+    """E[T_tot] of the *pipelined* step: max(compute, comm) + eps.
+
+    In the steady state of the stale-by-one pipelined step
+    (``make_coded_train_step(pipelined=True)``) worker ``i``'s step-t
+    collective overlaps its step-(t+1) compute, so the worker's cycle time
+    is ``max(T_comp_i, T_comm_i)`` instead of the sum; the master still
+    waits for the fastest ``n - s``.  With the phases independent the max's
+    CDF is the product of the two shifted-exponential CDFs, and the same
+    order-statistic survival integral as :func:`expected_total_runtime`
+    applies.  ``eps`` is the pipeline's residual serial cost (fill/drain
+    amortisation and the stale-by-one bookkeeping) — the planner adds a
+    small positive value so pipelining never wins on a pure tie against the
+    synchronous step it perturbs.
+    """
+    if s > d - m:
+        raise ValueError("infeasible triple: need s <= d - m")
+    a, shift_a = params.lambda1 / d, d * params.t1
+    b, shift_b = m * params.lambda2, params.t2 / m
+    rate = min(a, b)
+    t_hi = max(shift_a, shift_b) + (math.log(max(params.n, 2)) + 45.0) / rate
+    grid = np.linspace(0.0, t_hi, npts)
+    F = (_shifted_exp_cdf(grid, a, shift_a)
+         * _shifted_exp_cdf(grid, b, shift_b))
+    return _order_stat_mean(F, grid, params.n, params.n - s) + eps
+
+
 def runtime_table(params: RuntimeParams, npts: int = 120_000) -> np.ndarray:
     """(n, n) table: entry [m-1, d-1] = E[T_tot] for s = d - m (NaN if m > d).
 

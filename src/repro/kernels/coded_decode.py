@@ -81,3 +81,75 @@ def coded_decode(F: jax.Array, W: jax.Array, *, tile_v: int = 512,
         out_shape=jax.ShapeDtypeStruct((V, m, R), out_dtype),
         interpret=interpret,
     )(F, W)
+
+
+# ---------------------------------------------------------------- fused path
+def _decode_apply_kernel(lr, momentum, scale,
+                         f_ref, w_ref, p_ref, mu_ref,
+                         pn_ref, mun_ref, ss_ref):
+    """f: (n, TV), w: (n, m), p/mu: (TV, m) -> p', mu', partial sum(g^2)."""
+    f = f_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    g = jnp.einsum("nv,nu->vu", f, w) * scale          # decoded, grad-scaled
+    mu = momentum * mu_ref[...] + g                     # SGD-momentum state
+    pn_ref[...] = p_ref[...] - lr * mu
+    mun_ref[...] = mu
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        ss_ref[...] = jnp.zeros_like(ss_ref)
+
+    ss_ref[0, 0] += jnp.sum(g * g)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("lr", "momentum", "scale", "tile_v",
+                                    "interpret"))
+def coded_decode_apply(F: jax.Array, W: jax.Array, P: jax.Array,
+                       MU: jax.Array, *, lr: float, momentum: float,
+                       scale: float, tile_v: int = 512,
+                       interpret: bool = False):
+    """Fused decode + SGD-momentum apply for one packed wire bucket.
+
+    F: (n, L) gathered wire stack; W: (n, m) decode weights; P / MU:
+    (L, m) f32 bucket-layout views of the params and momentum state
+    (``repro.coding.packing.pack_param_groups``).  One pass computes
+
+        g   = scale * (F^T W)        (paper eq. 19-21 + grad scaling)
+        mu' = momentum * mu + g
+        p'  = p - lr * mu'
+
+    and returns ``(p', mu', sum(g*g))`` — the decode, the unpack-free
+    optimizer apply and the gradient-norm partial in a single kernel per
+    bucket, instead of decode -> unpack -> tree-wise update.  Tiling and
+    the in-kernel f32 contraction match :func:`coded_decode`, so the fused
+    parameter update is bit-identical to the unfused path's.  P/MU are
+    aliased to the outputs (donated by the pipelined step).
+    """
+    n, L = F.shape
+    m = W.shape[1]
+    tv = pick_tile(L, tile_v, 128)
+    kern = functools.partial(_decode_apply_kernel,
+                             float(lr), float(momentum), float(scale))
+    return pl.pallas_call(
+        kern,
+        grid=(L // tv,),
+        in_specs=[
+            pl.BlockSpec((n, tv), lambda i: (0, i)),
+            pl.BlockSpec((n, m), lambda i: (0, 0)),
+            pl.BlockSpec((tv, m), lambda i: (i, 0)),
+            pl.BlockSpec((tv, m), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tv, m), lambda i: (i, 0)),
+            pl.BlockSpec((tv, m), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((L, m), jnp.float32),
+            jax.ShapeDtypeStruct((L, m), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        input_output_aliases={2: 0, 3: 1},
+        interpret=interpret,
+    )(F, W, P, MU)

@@ -101,3 +101,71 @@ def coded_encode(G: jax.Array, C: jax.Array, *, tile_v: int = 512,
         out_shape=jax.ShapeDtypeStruct((V, R), out_dtype),
         interpret=interpret,
     )(G, C)
+
+
+# ---------------------------------------------------------------- fused path
+def _encode_acc_kernel_2d(a_ref, g_ref, c_ref, o_ref):
+    """a: (TV,), g: (d, TV, m), c: (d, m), o: (TV,) — o = a + encode(g, c)."""
+    g = g_ref[...].astype(jnp.float32)
+    c = c_ref[...].astype(jnp.float32)
+    o_ref[...] = (a_ref[...].astype(jnp.float32)
+                  + jnp.einsum("jvu,ju->v", g, c)).astype(o_ref.dtype)
+
+
+def _encode_acc_kernel_3d(a_ref, g_ref, c_ref, o_ref):
+    """a: (TV, TR), g: (d, TV, m, TR), c: (d, m), o: (TV, TR)."""
+    g = g_ref[...].astype(jnp.float32)
+    c = c_ref[...].astype(jnp.float32)
+    o_ref[...] = (a_ref[...].astype(jnp.float32)
+                  + jnp.einsum("jvur,ju->vr", g, c)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tile_v", "tile_r", "interpret"))
+def coded_encode_acc(acc: jax.Array, G: jax.Array, C: jax.Array, *,
+                     tile_v: int = 512, tile_r: int = 512,
+                     interpret: bool = False) -> jax.Array:
+    """Accumulating encode: ``acc + coded_encode(G, C)`` in one pass.
+
+    acc: (V,) or (V, R) f32 — one leaf's 128-aligned slot of a wire-bucket
+    accumulator (``repro.coding.packing``); G: (d, V, m[, R]); C: (d, m).
+    The pipelined step's fused encode path calls this once per (subset,
+    leaf) so the wire buffer fills as gradient leaves materialise, instead
+    of materialising every per-leaf encoding and concatenating in a later
+    pack copy.  ``input_output_aliases`` updates the accumulator in place
+    (the slot is consumed each fold); accumulation stays f32 in-kernel, so
+    the fold is bit-identical to ``acc + coded_encode(G, C)``.
+    """
+    d, V, m = G.shape[:3]
+    assert acc.dtype == jnp.float32, "wire accumulators are f32"
+    if G.ndim == 3:
+        tv = pick_tile(V, tile_v, 128)
+        return pl.pallas_call(
+            _encode_acc_kernel_2d,
+            grid=(V // tv,),
+            in_specs=[
+                pl.BlockSpec((tv,), lambda i: (i,)),
+                pl.BlockSpec((d, tv, m), lambda i: (0, i, 0)),
+                pl.BlockSpec((d, m), lambda i: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((tv,), lambda i: (i,)),
+            out_shape=jax.ShapeDtypeStruct((V,), jnp.float32),
+            input_output_aliases={0: 0},
+            interpret=interpret,
+        )(acc, G, C)
+    R = G.shape[3]
+    tv = pick_tile(V, tile_v, 8)
+    tr = pick_tile(R, tile_r, 128)
+    return pl.pallas_call(
+        _encode_acc_kernel_3d,
+        grid=(V // tv, R // tr),
+        in_specs=[
+            pl.BlockSpec((tv, tr), lambda i, j: (i, j)),
+            pl.BlockSpec((d, tv, m, tr), lambda i, j: (0, i, 0, j)),
+            pl.BlockSpec((d, m), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tv, tr), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((V, R), jnp.float32),
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(acc, G, C)

@@ -21,6 +21,11 @@ class Optimizer:
     init: Callable[[PyTree], PyTree]
     update: Callable[[PyTree, PyTree, PyTree], tuple[PyTree, PyTree]]
     # update(grads, opt_state, params) -> (new_params, new_opt_state)
+    # Introspection for fused decode-plus-apply paths: `kind` names the
+    # update rule ("" = opaque, fusion unavailable) and `hyper` carries the
+    # scalar hyperparameters a kernel needs to replicate it.
+    kind: str = ""
+    hyper: dict | None = None
 
 
 def _f32(t):
@@ -71,7 +76,8 @@ def sgd_momentum(lr: float, momentum: float = 0.9) -> Optimizer:
                            params, mu)
         return new, {"mu": mu}
 
-    return Optimizer(init, update)
+    return Optimizer(init, update, kind="sgd",
+                     hyper={"lr": float(lr), "momentum": float(momentum)})
 
 
 def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,

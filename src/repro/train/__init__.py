@@ -1,5 +1,9 @@
 from . import sharding
-from .coded_step import StepArtifacts, make_coded_train_step
+from .coded_step import (StepArtifacts, make_coded_train_step,
+                         pipelining_supported)
+from .pipeline import CompiledPipeline, PipelineDriver, PipelineFns
 from .trainer import Trainer
 
-__all__ = ["StepArtifacts", "make_coded_train_step", "Trainer", "sharding"]
+__all__ = ["StepArtifacts", "make_coded_train_step", "pipelining_supported",
+           "PipelineDriver", "PipelineFns", "CompiledPipeline", "Trainer",
+           "sharding"]

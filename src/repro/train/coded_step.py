@@ -45,6 +45,7 @@ from repro.models import api as model_api
 from repro.optim import Optimizer
 
 from . import sharding
+from .pipeline import CompiledPipeline, PipelineFns
 
 PyTree = Any
 
@@ -75,8 +76,23 @@ class StepArtifacts:
     pack_plan: coding.PackPlan | None = None
     loads: tuple[int, ...] = ()
     partial: bool = False
+    pipelined: bool = False
+    fuse_apply: bool = False
+    pipeline: Callable | None = None   # (batch_shapes) -> PipelineFns
+    # memoized jitted executables, keyed by (batch signature, donate): the
+    # bench's donated steady-state step and the autotuner's telemetry step
+    # share ONE executable instead of tracing twice (and `instrumented`
+    # wraps exactly the `compiled` object, never a private re-jit)
+    _exe_cache: dict = dataclasses.field(default_factory=dict, init=False,
+                                         repr=False, compare=False)
 
     # ---- benchmark / driver hooks --------------------------------------
+    @staticmethod
+    def _batch_sig(batch) -> tuple:
+        flat, treedef = jax.tree.flatten(batch)
+        return (tuple((tuple(x.shape), str(x.dtype)) for x in flat),
+                str(treedef))
+
     def compiled(self, batch, donate: bool = False):
         """Jit the step for a batch (arrays or ShapeDtypeStructs).
 
@@ -89,13 +105,48 @@ class StepArtifacts:
         matching the Trainer's jit) so steady-state timing loops reuse the
         update buffers — callers must then thread the returned params/state
         into the next call instead of replaying the originals.
+
+        Memoized per (batch shapes, donate): repeat callers — the bench's
+        timing loop, `instrumented` telemetry wrappers, HLO dumps — all
+        receive the same jitted callable, so the step is traced and
+        compiled at most once per signature.
         """
-        shapes = jax.tree.map(
-            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), batch)
-        fn, _, _ = self.step(shapes)
-        if donate:
-            return jax.jit(fn, donate_argnums=(0, 1))
-        return jax.jit(fn)
+        key = self._batch_sig(batch) + (bool(donate),)
+        if key not in self._exe_cache:
+            shapes = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), batch)
+            fn, _, _ = self.step(shapes)
+            self._exe_cache[key] = (jax.jit(fn, donate_argnums=(0, 1))
+                                    if donate else jax.jit(fn))
+        return self._exe_cache[key]
+
+    def compiled_pipeline(self, batch, donate: bool = True) -> CompiledPipeline:
+        """Jit the pipelined fill/steady/drain triple for a batch.
+
+        donate=True donates params/opt-state AND the wire-state buffers of
+        ``steady``/``drain`` (the double-buffer swap reuses the retired
+        buffer's memory); ``fill`` never donates — its params are reused by
+        the first steady call.  Memoized like :meth:`compiled`.
+        """
+        if self.pipeline is None:
+            raise ValueError("step was not built with pipelined=True")
+        key = ("pipeline",) + self._batch_sig(batch) + (bool(donate),)
+        if key not in self._exe_cache:
+            shapes = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), batch)
+            fns: PipelineFns = self.pipeline(shapes)
+            B = fns.num_buffers
+            if donate:
+                steady = jax.jit(fns.steady,
+                                 donate_argnums=(0, 1) + tuple(range(6, 6 + B)))
+                drain = jax.jit(fns.drain,
+                                donate_argnums=(0, 1) + tuple(range(3, 3 + B)))
+            else:
+                steady, drain = jax.jit(fns.steady), jax.jit(fns.drain)
+            self._exe_cache[key] = CompiledPipeline(
+                fill=jax.jit(fns.fill), steady=steady, drain=drain,
+                num_buffers=B)
+        return self._exe_cache[key]
 
     def lowered(self, batch, cfg, optimizer):
         """Lower (don't execute) the step for abstract inputs: returns the
@@ -141,6 +192,9 @@ class StepArtifacts:
             on_time(time.perf_counter() - t0)
             return out
 
+        # the executable actually timed — tests assert it IS the memoized
+        # `compiled(...)` object (identical HLO by identity, not by diff)
+        timed.inner = fn
         return timed
 
     def step_inputs(self, stragglers=()) -> dict[str, jax.Array]:
@@ -162,6 +216,18 @@ def _axis_prod(mesh, axes) -> int:
     return int(np.prod([mesh.shape[a] for a in axes]))
 
 
+def pipelining_supported(mesh, schedule: str = "gather") -> bool:
+    """Whether the async pipelined step is available on this runtime/scheme:
+    the schedule must carry an encoding (psum has no wire to double-buffer)
+    and the runtime must lower native collectives inside shard_map — the
+    degraded old-jax psum-emulated path still *builds* a correct pipeline
+    (tests exercise its parity) but gains nothing from overlap, so drivers
+    use this predicate to skip it gracefully."""
+    from repro.coding import get_schedule
+    return (get_schedule(schedule).uses_encoding
+            and collectives_ok(mesh, _data_axes(mesh)))
+
+
 def make_coded_train_step(cfg, code: GradCode, mesh, optimizer: Optimizer,
                           *, schedule: str = "gather",
                           grad_scale: float | None = None,
@@ -169,6 +235,8 @@ def make_coded_train_step(cfg, code: GradCode, mesh, optimizer: Optimizer,
                           backend: str | coding.CodecBackend = "auto",
                           packed: bool = True,
                           partial: bool = False,
+                          pipelined: bool = False,
+                          fuse_apply: bool | None = None,
                           use_kernels: bool | None = None) -> StepArtifacts:
     """Build the shard_map'd coded train step for one architecture.
 
@@ -204,6 +272,29 @@ def make_coded_train_step(cfg, code: GradCode, mesh, optimizer: Optimizer,
     ``decode_err_bound`` metric: ``err_factor * sqrt(sum_j ||g_j||^2)``,
     an upper bound on the L2 error of the least-squares decoded gradient
     over the subsets that kept at least one live holder.
+
+    pipelined (default False): additionally build the async three-phase
+    step (``StepArtifacts.pipeline`` / ``compiled_pipeline``): fill
+    encodes one batch into double-buffered wire-bucket state, steady
+    decodes the in-flight buffers (stale-by-one) while encoding the
+    current batch at pre-update params — the decode collective and the
+    encode compute are dataflow-independent, so XLA overlaps them — and
+    drain retires the last buffers.  The encode folds each subset gradient
+    straight into the 128-aligned wire layout (``Codec.encode_into``, the
+    accumulating encode kernel) instead of materialise-then-pack.
+    Requires ``packed=True``, an encoding schedule (not psum) and
+    ``partial=False``; the synchronous executable is still built and is
+    byte-identical to the non-pipelined build.  Parity contract: fill
+    immediately followed by drain == the synchronous step, bit for bit.
+
+    fuse_apply: fuse the per-bucket decode contraction with the optimizer
+    update (``Codec.decode_apply_packed``: decode + SGD-momentum + param
+    write in one kernel on the gather schedule).  Only valid for
+    ``optimizer.kind == "sgd"``.  Params and momentum stay bit-identical
+    to the synchronous step (the kernel replicates its op sequence), but
+    the ``grad_norm`` metric sums squares in bucket order instead of leaf
+    order (~1e-6 relative drift), so the default (None) resolves to False
+    and the fully bit-exact path stays the default.  Pipelined-only.
     """
     if use_kernels is not None:
         warnings.warn("use_kernels is deprecated; pass backend='pallas' "
@@ -225,6 +316,30 @@ def make_coded_train_step(cfg, code: GradCode, mesh, optimizer: Optimizer,
     # inside the manual region when a >1 auto (model) axis remains: unroll the
     # subset loop and decode via the schedules' psum emulation there.
     degraded = not collectives_ok(mesh, data_axes)
+
+    if pipelined:
+        if not codec.schedule.uses_encoding:
+            raise ValueError(
+                "pipelined=True needs an encoding schedule (gather/a2a); "
+                "the psum baseline has no wire to double-buffer")
+        if not packed:
+            raise ValueError(
+                "pipelined=True requires packed=True: the wire state IS the "
+                "PackPlan's bucketed flat buffers")
+        if partial:
+            raise ValueError(
+                "pipelined partial-recovery is unsupported: the err_factor "
+                "certificate is computed from the same step's subset "
+                "gradients and cannot ride the stale-by-one wire")
+    fuse = False if fuse_apply is None else bool(fuse_apply)
+    if fuse and not pipelined:
+        raise ValueError("fuse_apply is a pipelined-step lever; "
+                         "pass pipelined=True")
+    if fuse and optimizer.kind != "sgd":
+        raise ValueError(
+            f"fuse_apply supports optimizer.kind='sgd' only (the fused "
+            f"kernel replicates the SGD-momentum rule); got "
+            f"{optimizer.kind or 'opaque'!r}")
 
     def scan_subsets(f, init, xs):
         if not degraded:
@@ -396,6 +511,149 @@ def make_coded_train_step(cfg, code: GradCode, mesh, optimizer: Optimizer,
 
     fn = body_psum if not codec.schedule.uses_encoding else body
 
+    # --- pipelined three-phase bodies -----------------------------------
+    # Shared static tables: where every coded leaf lands in the wire
+    # buckets (fused-encode fold targets) and how the psum-fallback leaves
+    # + the masked loss scalar lay out in the flat (S,) side buffer.
+    if pipelined:
+        flat_pshapes = jax.tree.leaves(pshapes)
+        slot_items = [(bi, s) for bi, b in enumerate(pplan.buckets)
+                      for s in b.slots]
+        small_ix = [i for i, pl_ in enumerate(flat_plans) if not pl_.coded]
+        small_shapes = [tuple(flat_pshapes[i].shape) for i in small_ix]
+        small_sizes = [int(np.prod(sh)) for sh in small_shapes]
+
+    def _encode_wire(params, lb, Ci, rho_i, mask_i):
+        """One batch's backward + fused encode: scan the d subsets, folding
+        each subset gradient straight into the per-bucket f32 wire
+        accumulators (``Codec.encode_into`` — no materialise-then-pack
+        copy) and the rho-weighted psum-fallback accumulators.  Returns
+        (per-bucket wire buffers in the wire dtype, (S,) f32 side buffer =
+        concat(small-leaf flats) + [masked loss]).  Bit-identical to the
+        synchronous body's fold -> to_wire -> pack_bucket: the add order
+        per element is the same and the padding gaps stay exactly zero."""
+        def per_subset(carry, xs):
+            accs, smalls, loss_acc = carry
+            sub, cj, rj = xs
+            lval, g = jax.value_and_grad(loss_fn)(params, sub)
+            flat_g = jax.tree.leaves(g)
+            accs = list(accs)
+            for bi, slot in slot_items:
+                accs[bi] = codec.encode_into(
+                    accs[bi], flat_g[slot.leaf_index].astype(jnp.float32),
+                    cj, slot)
+            smalls = tuple(sm + rj * flat_g[i].astype(jnp.float32)
+                           for sm, i in zip(smalls, small_ix))
+            return (tuple(accs), smalls, loss_acc + rj * lval), None
+
+        init = (tuple(jnp.zeros((b.size,), jnp.float32)
+                      for b in pplan.buckets),
+                tuple(jnp.zeros(sh, jnp.float32) for sh in small_shapes),
+                jnp.zeros((), jnp.float32))
+        (accs, smalls, loss_sum), _ = scan_subsets(per_subset, init,
+                                                   (lb, Ci, rho_i))
+        wires = tuple(codec.to_wire(a, mask_i) for a in accs)
+        side = jnp.concatenate([s_.reshape(-1) for s_ in smalls]
+                               + [(loss_sum * mask_i)[None]])
+        return wires, side
+
+    def _decode_update(params, opt_state, W, W_row, wires, side):
+        """Decode the in-flight wire + side buffers and apply the update:
+        the synchronous step's phases 4-5 operating on state instead of
+        locally produced encodings.  Op-for-op identical to the sync body
+        (bitwise parity) on the default path; with ``fuse_apply`` the coded
+        leaves ride the fused decode-plus-apply kernel instead."""
+        side_sum = jax.lax.psum(side, data_axes)
+        loss_global = side_sum[-1] / k_subsets
+        flat_params, ptd = jax.tree.flatten(params)
+        small_grads: dict[int, jax.Array] = {}
+        off = 0
+        for i, sz, sh in zip(small_ix, small_sizes, small_shapes):
+            small_grads[i] = (jax.lax.slice_in_dim(side_sum, off, off + sz)
+                              .reshape(sh) * grad_scale)
+            off += sz
+
+        if not fuse:
+            decs = [codec.decode_packed(w, W, data_axes, W_row=W_row,
+                                        emulate=degraded) for w in wires]
+            flat_grads: list = [None] * len(flat_params)
+            for i, g_ in codec.unpack(decs, pplan).items():
+                flat_grads[i] = g_ * grad_scale
+            for i, g_ in small_grads.items():
+                flat_grads[i] = g_
+            grads = ptd.unflatten(flat_grads)
+            gnorm = jnp.sqrt(sum(jnp.sum(g_ * g_)
+                                 for g_ in jax.tree.leaves(grads)))
+            new_params, new_opt = optimizer.update(grads, opt_state, params)
+        else:
+            hy = optimizer.hyper
+            flat_mu = ptd.flatten_up_to(opt_state["mu"])
+            p_bufs = codec.pack_params(flat_params, pplan)
+            mu_bufs = codec.pack_params(flat_mu, pplan)
+            new_p_bufs, new_mu_bufs, ss_parts = [], [], []
+            for w, pb, mb in zip(wires, p_bufs, mu_bufs):
+                pn, mn, ss = codec.decode_apply_packed(
+                    w, W, pb, mb, data_axes, lr=hy["lr"],
+                    momentum=hy["momentum"], scale=grad_scale,
+                    W_row=W_row, emulate=degraded)
+                new_p_bufs.append(pn)
+                new_mu_bufs.append(mn)
+                ss_parts.append(ss)
+            # small leaves ride the plain optimizer update (zero grads at
+            # coded positions — their state is overwritten from the fused
+            # buffers right below)
+            flat_gz = [small_grads.get(i,
+                                       jnp.zeros(flat_params[i].shape,
+                                                 jnp.float32))
+                       for i in range(len(flat_params))]
+            new_params, new_opt = optimizer.update(
+                ptd.unflatten(flat_gz), opt_state, params)
+            flat_np = ptd.flatten_up_to(new_params)
+            flat_nmu = ptd.flatten_up_to(new_opt["mu"])
+            for i, v in codec.unpack_params(new_p_bufs, pplan,
+                                            flat_params).items():
+                flat_np[i] = v
+            for i, v in codec.unpack_params(new_mu_bufs, pplan,
+                                            flat_mu).items():
+                flat_nmu[i] = v
+            new_params = ptd.unflatten(flat_np)
+            new_opt = {"mu": ptd.unflatten(flat_nmu)}
+            gnorm = jnp.sqrt(sum(ss_parts)
+                             + sum(jnp.sum(g_ * g_)
+                                   for g_ in small_grads.values()))
+
+        metrics = {"loss": loss_global[None], "grad_norm": gnorm[None]}
+        return new_params, new_opt, metrics
+
+    def body_fill(params, batch, mask, rho, Csh):
+        """Pipeline fill: encode one batch, emit wire state, no update."""
+        lb = jax.tree.map(lambda x: x[0], batch)
+        wires, side = _encode_wire(params, lb, Csh[0], rho[0], mask[0])
+        return tuple(w[None] for w in wires) + (side[None],)
+
+    def body_steady(params, opt_state, batch, W, mask, rho, Csh, Wsh,
+                    *wire_state):
+        """Steady state: decode the in-flight wire (pattern of the PREVIOUS
+        call — its W arrives now) and apply the stale-by-one update, while
+        encoding the current batch at the pre-update params; the collective
+        and the backward pass share no data dependency, so XLA overlaps
+        them."""
+        lb = jax.tree.map(lambda x: x[0], batch)
+        prev_wires = tuple(w[0] for w in wire_state[:-1])
+        prev_side = wire_state[-1][0]
+        new_params, new_opt, metrics = _decode_update(
+            params, opt_state, W, Wsh[0], prev_wires, prev_side)
+        wires, side = _encode_wire(params, lb, Csh[0], rho[0], mask[0])
+        return ((new_params, new_opt, metrics)
+                + tuple(w[None] for w in wires) + (side[None],))
+
+    def body_drain(params, opt_state, W, Wsh, *wire_state):
+        """Drain: retire the last in-flight buffers — decode + update only."""
+        prev_wires = tuple(w[0] for w in wire_state[:-1])
+        prev_side = wire_state[-1][0]
+        return _decode_update(params, opt_state, W, Wsh[0],
+                              prev_wires, prev_side)
+
     # --- wrap in shard_map over the data axes (model stays auto/GSPMD) --
     # shard_map's in/out_specs may only mention the manual (data) axes; the
     # 'model' placement is carried by the jit in_shardings (GSPMD auto).
@@ -443,8 +701,53 @@ def make_coded_train_step(cfg, code: GradCode, mesh, optimizer: Optimizer,
 
         return stepfn, in_specs, out_specs
 
+    def make_pipeline(batch_shapes) -> PipelineFns:
+        """Build the un-jitted fill/steady/drain triple for one batch shape.
+
+        Wire-state arrays are (n, L_b) / (n, S) with dim 0 split over the
+        data axes — each worker's shard is its own wire buffer, so the
+        state round-trips through jit without resharding.
+        """
+        bspecs = sharding.batch_specs(batch_shapes, data_axes)
+        dspec = P(data_axes if len(data_axes) > 1 else data_axes[0])
+        mspecs = {"loss": P(), "grad_norm": P()}
+        nbuf = len(pplan.buckets) + 1          # bucket buffers + side buffer
+        wire_specs = (dspec,) * nbuf
+
+        fill_sm = shard_map(
+            body_fill, mesh=mesh,
+            in_specs=_strip((pspecs, bspecs)) + (dspec, dspec, dspec),
+            out_specs=wire_specs,
+            axis_names=set(data_axes), check_vma=False)
+        steady_sm = shard_map(
+            body_steady, mesh=mesh,
+            in_specs=(_strip((pspecs, ospecs, bspecs, P()))
+                      + (dspec, dspec, dspec, dspec) + wire_specs),
+            out_specs=_strip((pspecs, ospecs, mspecs)) + wire_specs,
+            axis_names=set(data_axes), check_vma=False)
+        drain_sm = shard_map(
+            body_drain, mesh=mesh,
+            in_specs=(_strip((pspecs, ospecs, P())) + (dspec,) + wire_specs),
+            out_specs=_strip((pspecs, ospecs, mspecs)),
+            axis_names=set(data_axes), check_vma=False)
+
+        def fillfn(params, batch, mask, rho):
+            return fill_sm(params, batch, mask, rho, C)
+
+        def steadyfn(params, opt_state, batch, W, mask, rho, *wire):
+            return steady_sm(params, opt_state, batch, W, mask, rho, C, W,
+                             *wire)
+
+        def drainfn(params, opt_state, W, *wire):
+            return drain_sm(params, opt_state, W, W, *wire)
+
+        return PipelineFns(fill=fillfn, steady=steadyfn, drain=drainfn,
+                           num_buffers=nbuf)
+
     return StepArtifacts(step=make, in_specs=(pspecs, ospecs), out_specs=None,
                          plans=plans, coded_fraction=coded_frac, codec=codec,
                          pack_plan=pplan,
                          loads=tuple(getattr(code, "loads", (code.d,) * n)),
-                         partial=partial)
+                         partial=partial, pipelined=pipelined,
+                         fuse_apply=fuse,
+                         pipeline=make_pipeline if pipelined else None)

@@ -1,0 +1,147 @@
+"""Host-side driver for the async pipelined coded step.
+
+The pipelined step (``make_coded_train_step(..., pipelined=True)``) splits
+one training iteration into three executables so the packed-wire collective
+of step t can overlap the forward/backward of step t+1 (stale-by-one
+aggregation; see DESIGN.md §9 for the timeline diagram):
+
+  fill    (params, batch, mask, rho)                   -> wire state
+  steady  (params, opt, batch, W, mask, rho, *wire)    -> (params', opt',
+                                                           metrics, *wire')
+  drain   (params, opt, W, *wire)                      -> (params', opt',
+                                                           metrics)
+
+The *wire state* is one double-buffered flat buffer per ``PackPlan`` bucket
+(the (n, L_b) stack of every worker's masked encodings, dim 0 sharded over
+the data axes) plus one (n, S) f32 *side* buffer carrying the psum-fallback
+leaves and the masked loss scalar.  ``steady`` decodes the in-flight buffers
+with the decode weights ``W`` of the pattern drawn when they were encoded,
+applies the update, and encodes the current batch at the *pre-update*
+params — the decode collective and the encode compute are therefore
+independent in the dataflow graph and XLA overlaps them.
+
+``PipelineDriver`` owns the host bookkeeping the three-phase protocol
+needs: it threads the wire state between calls, holds the *pending* decode
+weights (each call's W applies to the buffers encoded on that call, so it
+is consumed one call later), fills on first use, and drains automatically
+when the batch shape changes.  Parity contract: fill followed immediately
+by drain reproduces the synchronous step bit-for-bit on the same batch;
+the steady state differs from synchronous SGD only by the documented
+one-step gradient staleness.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineFns:
+    """The three un-jitted pipelined executables for one batch shape.
+
+    ``num_buffers`` is the wire-state arity (one buffer per pack-plan
+    bucket plus the side buffer) — the trailing ``*wire`` argument and
+    return counts of ``steady``/``drain``.
+    """
+    fill: Callable
+    steady: Callable
+    drain: Callable
+    num_buffers: int
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledPipeline:
+    """Jitted triple of :class:`PipelineFns` (see
+    ``StepArtifacts.compiled_pipeline``).  With donation on, ``steady`` and
+    ``drain`` donate params/opt-state and every wire buffer — callers must
+    thread the returned state forward, never replay inputs."""
+    fill: Callable
+    steady: Callable
+    drain: Callable
+    num_buffers: int
+
+
+def _shape_sig(batch) -> tuple:
+    flat, treedef = jax.tree.flatten(batch)
+    return (tuple((tuple(x.shape), str(x.dtype)) for x in flat), str(treedef))
+
+
+@dataclasses.dataclass
+class PipelineDriver:
+    """Stateful host loop around one pipelined ``StepArtifacts``.
+
+    ``step(params, opt_state, batch, W, mask, rho)`` returns
+    ``(params', opt_state', metrics_or_None)``: the first call fills the
+    pipeline (no update yet — metrics is None), every later call runs one
+    steady-state step whose metrics describe the *previous* batch (its
+    gradient is the one applied).  ``drain(params, opt_state)`` retires the
+    in-flight buffers and returns the final update + metrics.
+
+    The driver stores each call's ``W`` as *pending*: the decode weights of
+    a straggler pattern apply to the wire encoded under that pattern's
+    mask/rho, which is consumed by the *next* call.  A batch-shape change
+    mid-flight triggers an automatic drain (its metrics are returned with
+    the fill call that follows).  ``last_fresh`` flags calls that built a
+    new executable, so drivers can keep first-call compile time out of
+    step-cost calibration.
+    """
+    arts: Any
+    donate: bool = True
+
+    def __post_init__(self):
+        self._compiled: CompiledPipeline | None = None
+        self._shape_key: tuple | None = None
+        self._state: tuple | None = None
+        self._pending_W = None
+        self._warm: set = set()
+        self.last_fresh: bool = False
+
+    @property
+    def in_flight(self) -> bool:
+        """True when wire buffers are pending a decode (drain required
+        before abandoning this driver)."""
+        return self._state is not None
+
+    def _get(self, batch, key):
+        if key != self._shape_key:
+            assert self._state is None, "drain before changing batch shape"
+            self._compiled = self.arts.compiled_pipeline(
+                batch, donate=self.donate)
+            self._shape_key = key
+        return self._compiled
+
+    def step(self, params, opt_state, batch, W, mask, rho):
+        """Advance the pipeline by one batch; see the class docstring."""
+        metrics = None
+        key = _shape_sig(batch)
+        if self._state is not None and key != self._shape_key:
+            params, opt_state, metrics = self.drain(params, opt_state)
+        cp = self._get(batch, key)
+        if self._state is None:
+            self.last_fresh = ("fill", key) not in self._warm
+            self._warm.add(("fill", key))
+            self._state = tuple(cp.fill(params, batch, mask, rho))
+            self._pending_W = W
+            return params, opt_state, metrics
+        self.last_fresh = ("steady", key) not in self._warm
+        self._warm.add(("steady", key))
+        out = cp.steady(params, opt_state, batch, self._pending_W, mask, rho,
+                        *self._state)
+        params, opt_state, metrics = out[0], out[1], out[2]
+        self._state = tuple(out[3:])
+        self._pending_W = W
+        return params, opt_state, metrics
+
+    def drain(self, params, opt_state):
+        """Retire the in-flight wire: decode + apply the pending gradient.
+        Returns ``(params', opt_state', metrics)``."""
+        assert self._state is not None, "nothing in flight"
+        params, opt_state, metrics = self._compiled.drain(
+            params, opt_state, self._pending_W, *self._state)
+        self._state = None
+        self._pending_W = None
+        return params, opt_state, metrics

@@ -41,6 +41,7 @@ from repro.data import CodedBatcher
 from repro.optim import Optimizer
 
 from .coded_step import make_coded_train_step
+from .pipeline import PipelineDriver
 
 
 @dataclasses.dataclass
@@ -53,6 +54,7 @@ class Trainer:
     backend: str = "auto"              # codec backend: auto | ref | pallas
     packed: bool = True                # bucketed wire buffers (coded_step)
     partial: bool = False              # partial-recovery decode past s
+    pipelined: bool = False            # async double-buffered wire (stale-1)
     straggler_mode: str = "none"       # none | random | fixed
     fixed_stragglers: tuple = ()
     injector: Callable | None = None   # (step, code) -> WorkerTimes telemetry
@@ -73,7 +75,9 @@ class Trainer:
                 "workers of each draw are dropped); it cannot be combined "
                 f"with straggler_mode={self.straggler_mode!r}")
         self._arts_cache: dict[tuple, Any] = {}
-        self.arts = self._get_arts(self.code, self.schedule, self.packed)
+        self.arts = self._get_arts(self.code, self.schedule, self.packed,
+                                   self.pipelined)
+        self._driver: PipelineDriver | None = None
         self.batcher = CodedBatcher(self.code)
         key = jax.random.PRNGKey(self.seed)
         with set_mesh(self.mesh):
@@ -116,17 +120,20 @@ class Trainer:
 
     @property
     def _scheme_sig(self) -> tuple:
-        return (self._code_key(self.code), self.schedule, self.packed)
+        return (self._code_key(self.code), self.schedule, self.packed,
+                self.pipelined)
 
-    def _get_arts(self, code, schedule: str, packed: bool):
+    def _get_arts(self, code, schedule: str, packed: bool,
+                  pipelined: bool = False):
         """StepArtifacts for a scheme, built once per signature (the compile
         cache's first layer; the jitted executables are the second)."""
-        key = (self._code_key(code), schedule, packed, self.partial)
+        key = (self._code_key(code), schedule, packed, self.partial,
+               pipelined)
         if key not in self._arts_cache:
             self._arts_cache[key] = make_coded_train_step(
                 self.cfg, code, self.mesh, self.optimizer,
                 schedule=schedule, backend=self.backend, packed=packed,
-                partial=self.partial)
+                partial=self.partial, pipelined=pipelined)
         return self._arts_cache[key]
 
     def _current_plan(self):
@@ -139,7 +146,8 @@ class Trainer:
         return Plan(family=fam, d=self.code.d, s=self.code.s, m=self.code.m,
                     k=k, loads=loads, schedule=self.schedule,
                     packed=self.packed, predicted_wait_s=0.0,
-                    predicted_step_s=0.0, predicted_total_s=0.0)
+                    predicted_step_s=0.0, predicted_total_s=0.0,
+                    pipelined=self.pipelined)
 
     def _code_for_plan(self, plan):
         """Materialise the scheme object a ranked plan selects."""
@@ -152,12 +160,23 @@ class Trainer:
                                 k=plan.k)
 
     def _apply_plan(self, plan) -> None:
-        """Swap the active codec in place (code, schedule, wire, batcher)."""
+        """Swap the active codec in place (code, schedule, wire, batcher).
+
+        A pipelined swap first drains the in-flight wire (its buffers were
+        encoded under the outgoing scheme's pack plan and cannot be decoded
+        by the incoming one), applying the pending gradient before the new
+        codec takes over."""
+        if self._driver is not None and self._driver.in_flight:
+            self.params, self.opt_state, _ = self._driver.drain(
+                self.params, self.opt_state)
+        self._driver = None
         code = self._code_for_plan(plan)
         self.code = code
         self.schedule = plan.schedule
         self.packed = plan.packed
-        self.arts = self._get_arts(code, plan.schedule, plan.packed)
+        self.pipelined = getattr(plan, "pipelined", False)
+        self.arts = self._get_arts(code, plan.schedule, plan.packed,
+                                   self.pipelined)
         self.batcher = CodedBatcher(code)
 
     @property
@@ -191,15 +210,19 @@ class Trainer:
 
     def step(self, batch: dict[str, np.ndarray]) -> dict[str, float]:
         placed = self.batcher.place(batch)
-        shapes = jax.tree.map(
-            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), placed)
-        keyshape = (self._scheme_sig,
-                    tuple(sorted((k, v.shape) for k, v in placed.items())))
-        fresh = keyshape not in self._jitted
-        if fresh:
-            smapped, in_specs, _ = self.arts.step(shapes)
-            self._jitted[keyshape] = jax.jit(smapped, donate_argnums=(0, 1))
-        fn = self._jitted[keyshape]
+        fn = None
+        fresh = False
+        if not self.pipelined:
+            shapes = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), placed)
+            keyshape = (self._scheme_sig,
+                        tuple(sorted((k, v.shape) for k, v in placed.items())))
+            fresh = keyshape not in self._jitted
+            if fresh:
+                smapped, in_specs, _ = self.arts.step(shapes)
+                self._jitted[keyshape] = jax.jit(smapped,
+                                                 donate_argnums=(0, 1))
+            fn = self._jitted[keyshape]
         times = None
         if self.injector is not None:
             times = self.injector(self._step_count, self.code)
@@ -214,22 +237,41 @@ class Trainer:
             args.append(jnp.asarray(inp["err_factor"]))
         t0 = time.perf_counter()
         with set_mesh(self.mesh):
-            self.params, self.opt_state, metrics = fn(
-                self.params, self.opt_state,
-                jax.tree.map(jnp.asarray, placed), *args)
-        jax.block_until_ready(metrics)
+            if self.pipelined:
+                # the driver fills on first use (metrics None — no update
+                # retired yet) and runs overlapped steady steps after; its
+                # metrics describe the PREVIOUS batch, whose gradient is
+                # the one applied (stale-by-one)
+                if self._driver is None:
+                    self._driver = PipelineDriver(self.arts)
+                self.params, self.opt_state, metrics = self._driver.step(
+                    self.params, self.opt_state,
+                    jax.tree.map(jnp.asarray, placed), *args)
+                fresh = self._driver.last_fresh
+            else:
+                self.params, self.opt_state, metrics = fn(
+                    self.params, self.opt_state,
+                    jax.tree.map(jnp.asarray, placed), *args)
+        if metrics is not None:
+            jax.block_until_ready(metrics)
         wall = time.perf_counter() - t0
-        out = {k: float(v[0]) for k, v in metrics.items()}
+        out = ({"loss": float("nan"), "grad_norm": float("nan")}
+               if metrics is None
+               else {k: float(v[0]) for k, v in metrics.items()})
         if times is not None:
             from repro.tune import record_from_times
             # a fresh executable's first call pays one-time trace+compile:
             # keep it out of the step-cost calibration (measured_step_s <= 0
             # is ignored by StepCostBook) while still recording the worker
             # timings the estimator fits on; the returned "step_time_s"
-            # stays the real wall either way
+            # stays the real wall either way.  A pipelined fill call
+            # (metrics None) retires no update, so its wall is not a steady
+            # step cost either.
+            uncal = fresh or metrics is None
             rec = record_from_times(self._step_count, self.code,
                                     self.schedule, self.packed, times,
-                                    measured_step_s=0.0 if fresh else wall)
+                                    measured_step_s=0.0 if uncal else wall,
+                                    pipelined=self.pipelined)
             out["step_time_s"] = wall
             out["modeled_wait_s"] = rec.wait_s
             if self._tuner is not None:

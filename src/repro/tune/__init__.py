@@ -30,8 +30,8 @@ returning to a previously used scheme does not retrace.  See
 """
 from .estimator import (FitResult, crosscheck_waits, fit_runtime_params,
                         fit_shifted_exponential, synthetic_fit)
-from .planner import (Plan, StepCostBook, rank_plans, score_plan,
-                      step_cost_book)
+from .planner import (PIPELINE_EPS, Plan, StepCostBook, rank_plans,
+                      score_plan, step_cost_book)
 from .policy import AutotunePolicy, Autotuner
 from .telemetry import (DriftingSampler, ShiftedExpSampler, StepRecord,
                         TelemetryLog, WorkerTimes, record_from_times,
@@ -42,6 +42,7 @@ __all__ = [
     "Autotuner",
     "DriftingSampler",
     "FitResult",
+    "PIPELINE_EPS",
     "Plan",
     "ShiftedExpSampler",
     "StepCostBook",

@@ -38,10 +38,18 @@ import numpy as np
 
 from repro.bench.straggler import draw_patterns_hetero, mean_wait_s
 from repro.core.hetero import plan_hetero
-from repro.core.runtime_model import expected_total_runtime
+from repro.core.runtime_model import (expected_total_runtime,
+                                      expected_total_runtime_overlapped)
 
 from .estimator import FitResult
 from .telemetry import StepRecord
+
+# Per-step pipeline overhead charged to overlapped candidates (seconds):
+# the double-buffer bookkeeping is nearly free, but a strictly-zero epsilon
+# would let a pipelined plan tie its synchronous twin even when compute or
+# comm fully hides the other phase, and ties must break toward the simpler
+# scheme.
+PIPELINE_EPS = 1e-3
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,12 +67,13 @@ class Plan:
     predicted_wait_s: float     # modeled cluster wait under the fit
     predicted_step_s: float     # calibrated measured step cost
     predicted_total_s: float    # wait + step: the ranking key
+    pipelined: bool = False     # async double-buffered wire (stale-1)
 
     @property
     def scheme_key(self) -> tuple:
         """Hashable identity of the codec this plan selects (sans costs)."""
         return (self.family, self.d, self.s, self.m, self.k, self.loads,
-                self.schedule, self.packed)
+                self.schedule, self.packed, self.pipelined)
 
     def describe(self) -> str:
         """One-line human-readable summary."""
@@ -72,7 +81,8 @@ class Plan:
             if self.family == "hetero" else ""
         return (f"{self.family}(d={self.d},s={self.s},m={self.m}"
                 f"{extra}),{self.schedule},"
-                f"{'packed' if self.packed else 'per-leaf'}: "
+                f"{'packed' if self.packed else 'per-leaf'}"
+                f"{',pipelined' if self.pipelined else ''}: "
                 f"E[T]={self.predicted_total_s:.3f}s "
                 f"(wait {self.predicted_wait_s:.3f} "
                 f"+ step {self.predicted_step_s:.4f})")
@@ -104,10 +114,11 @@ class StepCostBook:
         for r in records:
             if r.measured_step_s <= 0:
                 continue
+            pipe = bool(getattr(r, "pipelined", False))
             exact.setdefault(
-                (r.d, r.k, tuple(r.loads), r.schedule, r.packed),
+                (r.d, r.k, tuple(r.loads), r.schedule, r.packed, pipe),
                 []).append(r.measured_step_s)
-            per_cfg.setdefault((r.schedule, r.packed), []).append(
+            per_cfg.setdefault((r.schedule, r.packed, pipe), []).append(
                 r.measured_step_s / max(r.d, 1))
             per_load.append(r.measured_step_s / max(r.d, 1))
         self._exact = {k: float(np.mean(v)) for k, v in exact.items()}
@@ -119,12 +130,12 @@ class StepCostBook:
         return len(self._exact)
 
     def cost(self, d: int, k: int, loads: tuple[int, ...], schedule: str,
-             packed: bool) -> float:
+             packed: bool, pipelined: bool = False) -> float:
         """Predicted measured-step seconds for a candidate scheme."""
-        key = (d, k, tuple(loads), schedule, packed)
+        key = (d, k, tuple(loads), schedule, packed, bool(pipelined))
         if key in self._exact:
             return self._exact[key]
-        cfg = self._per_cfg.get((schedule, packed))
+        cfg = self._per_cfg.get((schedule, packed, bool(pipelined)))
         return (cfg if cfg is not None else self._global) * max(d, 1)
 
 
@@ -158,12 +169,19 @@ def score_plan(fit: FitResult, plan: Plan,
     """
     book = cost_book or StepCostBook()
     if plan.family == "uniform":
-        wait = expected_total_runtime(fit.params, plan.d, plan.s, plan.m,
-                                      npts=npts)
+        if plan.pipelined:
+            # overlapped steady state: per-worker cycle max(comp, comm)
+            wait = expected_total_runtime_overlapped(
+                fit.params, plan.d, plan.s, plan.m, npts=npts,
+                eps=PIPELINE_EPS)
+        else:
+            wait = expected_total_runtime(fit.params, plan.d, plan.s, plan.m,
+                                          npts=npts)
     else:
         wait = _hetero_wait(fit, plan.loads, plan.k, plan.s, plan.m,
                             mc_iters, seed)
-    step = book.cost(plan.d, plan.k, plan.loads, plan.schedule, plan.packed)
+    step = book.cost(plan.d, plan.k, plan.loads, plan.schedule, plan.packed,
+                     plan.pipelined)
     return dataclasses.replace(plan, predicted_wait_s=wait,
                                predicted_step_s=step,
                                predicted_total_s=wait + step)
@@ -173,6 +191,7 @@ def rank_plans(fit: FitResult, *,
                schedules: Sequence[str] = ("gather", "a2a"),
                families: Sequence[str] = ("uniform",),
                packed_options: Sequence[bool] = (True,),
+               pipelined_options: Sequence[bool] = (False,),
                cost_book: StepCostBook | None = None,
                min_s: int = 0,
                hetero_threshold: float = 1.15,
@@ -186,9 +205,14 @@ def rank_plans(fit: FitResult, *,
     insists on ``s >= 1`` even when the model momentarily says stragglers
     are cheap).  ``hetero_threshold`` gates the hetero family on the fitted
     ``speed_spread``; ``"hetero!"`` in ``families`` forces it regardless.
-    Ties (e.g. two schedules with no measurements yet) break
+    ``pipelined_options`` adds async double-buffered candidates whose wait
+    is the *overlapped* steady-state model — per-worker cycle
+    ``max(compute, comm)`` plus :data:`PIPELINE_EPS`
+    (:func:`~repro.core.runtime_model.expected_total_runtime_overlapped`);
+    pipelining is a uniform-family knob (the hetero runtime stays
+    synchronous).  Ties (e.g. two schedules with no measurements yet) break
     deterministically toward the earlier entry in ``schedules`` /
-    ``packed_options``.
+    ``packed_options`` / ``pipelined_options``.
     """
     n = fit.params.n
     book = cost_book or StepCostBook()
@@ -196,18 +220,27 @@ def rank_plans(fit: FitResult, *,
     candidates: list[tuple] = []     # (total, tiebreak, Plan)
     sched_rank = {sc: i for i, sc in enumerate(schedules)}
     packed_rank = {pk: i for i, pk in enumerate(packed_options)}
+    pipe_rank = {pi: i for i, pi in enumerate(pipelined_options)}
 
-    def add(family, d, s, m, k, loads, wait):
+    def add(family, d, s, m, k, loads, waits):
+        # waits: {pipelined_flag: modeled wait} for the flags this scheme
+        # supports (hetero passes only {False: ...})
         for schedule in schedules:
             for packed in packed_options:
-                step = book.cost(d, k, loads, schedule, packed)
-                candidates.append((
-                    wait + step,
-                    (sched_rank[schedule], packed_rank[packed]),
-                    Plan(family=family, d=d, s=s, m=m, k=k, loads=loads,
-                         schedule=schedule, packed=packed,
-                         predicted_wait_s=wait, predicted_step_s=step,
-                         predicted_total_s=wait + step)))
+                for pipelined, wait in waits.items():
+                    if pipelined not in pipe_rank:
+                        continue   # scheme doesn't support this flag
+                    step = book.cost(d, k, loads, schedule, packed,
+                                     pipelined)
+                    candidates.append((
+                        wait + step,
+                        (sched_rank[schedule], packed_rank[packed],
+                         pipe_rank[pipelined]),
+                        Plan(family=family, d=d, s=s, m=m, k=k, loads=loads,
+                             schedule=schedule, packed=packed,
+                             predicted_wait_s=wait, predicted_step_s=step,
+                             predicted_total_s=wait + step,
+                             pipelined=pipelined)))
 
     if "uniform" in families:
         for d in range(1, n + 1):
@@ -215,8 +248,16 @@ def rank_plans(fit: FitResult, *,
                 s = d - m
                 if s < min_s:
                     continue
-                wait = expected_total_runtime(fit.params, d, s, m, npts=npts)
-                add("uniform", d, s, m, n, (d,) * n, wait)
+                waits = {}
+                for pipelined in pipelined_options:
+                    if pipelined:
+                        waits[True] = expected_total_runtime_overlapped(
+                            fit.params, d, s, m, npts=npts,
+                            eps=PIPELINE_EPS)
+                    else:
+                        waits[False] = expected_total_runtime(
+                            fit.params, d, s, m, npts=npts)
+                add("uniform", d, s, m, n, (d,) * n, waits)
 
     want_hetero = ("hetero!" in families
                    or ("hetero" in families
@@ -235,7 +276,7 @@ def rank_plans(fit: FitResult, *,
                 wait = _hetero_wait(fit, plan.loads, plan.k, s, m,
                                     mc_iters, seed)
                 add("hetero", max(plan.loads), s, m, plan.k,
-                    tuple(plan.loads), wait)
+                    tuple(plan.loads), {False: wait})
 
     candidates.sort(key=lambda c: (c[0], c[1]))
     return [c[2] for c in candidates]

@@ -45,6 +45,7 @@ class AutotunePolicy:
     schedules: tuple[str, ...] = ("gather", "a2a")
     families: tuple[str, ...] = ("uniform",)   # + "hetero" / "hetero!"
     packed_options: tuple[bool, ...] = (True,)
+    pipelined_options: tuple[bool, ...] = (False,)  # + True: async stale-1
     min_s: int = 0                  # floor on the straggler budget
     hetero_threshold: float = 1.15  # speed spread unlocking hetero plans
     switch_margin: float = 0.03     # min relative predicted gain to swap
@@ -116,7 +117,9 @@ class Autotuner:
         book = step_cost_book(window)
         ranked = rank_plans(
             fit, schedules=p.schedules, families=p.families,
-            packed_options=p.packed_options, cost_book=book, min_s=p.min_s,
+            packed_options=p.packed_options,
+            pipelined_options=p.pipelined_options,
+            cost_book=book, min_s=p.min_s,
             hetero_threshold=p.hetero_threshold, mc_iters=p.mc_iters,
             npts=p.npts, seed=p.seed + step)
         if not ranked:

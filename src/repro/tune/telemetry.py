@@ -88,6 +88,7 @@ class StepRecord:
     stragglers: tuple[int, ...] = ()
     wait_s: float = 0.0         # modeled master wait (order statistic)
     measured_step_s: float = 0.0  # wall-clock of the jitted step
+    pipelined: bool = False     # async double-buffered wire (stale-1)
 
     @property
     def n(self) -> int:
@@ -109,7 +110,8 @@ def scheme_k(code) -> int:
 
 def record_from_times(step: int, code, schedule: str, packed: bool,
                       times: WorkerTimes, n_drop: int | None = None,
-                      measured_step_s: float = 0.0) -> StepRecord:
+                      measured_step_s: float = 0.0,
+                      pipelined: bool = False) -> StepRecord:
     """Build a :class:`StepRecord` from a code object and a timing draw.
 
     ``code`` is any scheme with the ``GradCode`` duck surface (``d``, ``s``,
@@ -122,7 +124,8 @@ def record_from_times(step: int, code, schedule: str, packed: bool,
         k=scheme_k(code), loads=scheme_loads(code),
         schedule=schedule, packed=packed,
         compute_s=times.compute_s, comm_s=times.comm_s,
-        stragglers=slow, wait_s=wait, measured_step_s=measured_step_s)
+        stragglers=slow, wait_s=wait, measured_step_s=measured_step_s,
+        pipelined=pipelined)
 
 
 class TelemetryLog:

@@ -206,8 +206,18 @@ def test_unknown_backend_and_schedule_rejected():
 
 
 def test_shim_reexports_coding_package():
-    """core.coded_allreduce survives only as a shim over repro.coding."""
-    from repro.core import coded_allreduce as ca
+    """core.coded_allreduce survives only as a shim over repro.coding —
+    reachable lazily (eager `import repro.core` must not pull it in) and
+    warning loudly on actual import."""
+    import importlib
+    import sys
+    import warnings
+
+    sys.modules.pop("repro.core.coded_allreduce", None)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        ca = importlib.import_module("repro.core.coded_allreduce")
+    assert any(issubclass(w.category, DeprecationWarning) for w in rec)
     assert ca.LeafPlan is coding.LeafPlan
     assert ca.plan_tree is coding.plan_tree
     assert ca.make_step_inputs is coding.make_step_inputs

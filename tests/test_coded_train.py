@@ -17,7 +17,7 @@ import pytest
 from repro.compat import NATIVE_SHARD_MAP
 from repro.configs import get_config
 from repro.core import make_code
-from repro.core.coded_allreduce import make_step_inputs
+from repro.coding import make_step_inputs
 from repro.data import CodedBatcher, make_synthetic_batch
 from repro.launch.mesh import make_local_mesh
 from repro.models import api as model_api

@@ -8,9 +8,9 @@ pytest.importorskip("hypothesis")  # declared in pyproject [test]; optional at r
 from hypothesis import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 
+from repro.coding import plan_tree
 from repro.configs import get_config
 from repro.core import make_code
-from repro.core.coded_allreduce import plan_tree
 from repro.data import CodedBatcher, make_synthetic_batch
 from repro.models import api as model_api
 from repro.train import sharding

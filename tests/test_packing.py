@@ -90,6 +90,29 @@ def test_pack_plan_buckets_by_model_sharding():
         assert b.key[0] == "float32"             # wire dtype in the key
 
 
+def test_worker_chunk_slots_memoized():
+    """WireBucket.worker_chunk_slots is lru_cached (the frozen dataclass is
+    hashable): repeat calls during step retraces and tuning-loop scoring
+    serve the same tuple object instead of re-running the O(n * slots)
+    scan."""
+    tree = {"a": jax.ShapeDtypeStruct((64,), jnp.float32),
+            "b": jax.ShapeDtypeStruct((6, 8, 5), jnp.float32)}
+    plans = coding.plan_tree(tree, None, M)
+    (bucket,) = make_pack_plan(tree, plans, m=M, n=N).buckets
+    from repro.coding.packing import WireBucket
+    WireBucket.worker_chunk_slots.cache_clear()
+    first = bucket.worker_chunk_slots(N)
+    before = WireBucket.worker_chunk_slots.cache_info()
+    assert bucket.worker_chunk_slots(N) is first    # identity, not equality
+    after = WireBucket.worker_chunk_slots.cache_info()
+    assert after.hits == before.hits + 1
+    assert after.misses == before.misses
+    # a different n is a different cache entry, still correct accounting
+    assert bucket.worker_chunk_slots(2) is not first
+    covered = sorted((li, lo, hi) for w in first for (li, lo, hi) in w)
+    assert covered  # the union tiles the slots (full check in decode tests)
+
+
 def test_pack_plan_recv_elems_accounts_padding():
     tree = {"a": jax.ShapeDtypeStruct((64,), jnp.float32)}
     plans = coding.plan_tree(tree, None, M)

@@ -5,8 +5,8 @@ import pytest
 pytest.importorskip("hypothesis")  # declared in pyproject [test]; optional at runtime
 from hypothesis import given, settings, strategies as st
 
+from repro.coding import plan_leaf
 from repro.core import GradCode, tradeoff
-from repro.core.coded_allreduce import plan_leaf
 
 
 # ---------------------------------------------------------- valid-triple gen

@@ -135,6 +135,59 @@ def test_planner_min_s_floor_and_families():
     assert all(p.s >= 1 for p in ranked)
 
 
+def test_planner_pipelined_candidates_use_overlapped_model():
+    """pipelined_options=(False, True) doubles the uniform frontier: each
+    pipelined candidate's wait is the overlapped model (per-worker cycle
+    max(comp, comm) + PIPELINE_EPS), which dominates on comm-heavy
+    constants — and the sync twin of every pipelined plan keeps the plain
+    E[T_tot].  The default search space stays sync-only."""
+    from repro.core.runtime_model import expected_total_runtime_overlapped
+    from repro.tune import PIPELINE_EPS
+
+    exact = FitResult(params=PAPER_N8, speeds=np.ones(8), n_steps=0,
+                      n_samples=0)
+    assert all(not p.pipelined
+               for p in rank_plans(exact, schedules=("gather",), npts=8_000))
+    ranked = rank_plans(exact, schedules=("gather",), npts=8_000,
+                        pipelined_options=(False, True))
+    assert {p.pipelined for p in ranked} == {False, True}
+    top = ranked[0]
+    assert top.pipelined   # overlap always wins on the modeled wait alone
+    assert "pipelined" in top.describe()
+    for p in ranked:
+        want = (expected_total_runtime_overlapped(
+                    PAPER_N8, p.d, p.s, p.m, npts=8_000, eps=PIPELINE_EPS)
+                if p.pipelined
+                else expected_total_runtime(PAPER_N8, p.d, p.s, p.m,
+                                            npts=8_000))
+        assert p.predicted_wait_s == pytest.approx(want, rel=1e-6)
+    # scheme_key separates the twins (the trainer caches per signature)
+    keys = {p.scheme_key for p in ranked}
+    assert len(keys) == len(ranked)
+    # hetero stays synchronous: pipelining is a uniform-family knob
+    hranked = rank_plans(exact, schedules=("gather",), npts=8_000,
+                         families=("hetero!",), mc_iters=30,
+                         pipelined_options=(False, True))
+    assert hranked and all(not p.pipelined for p in hranked)
+
+
+def test_step_cost_book_keys_on_pipelined():
+    """A pipelined steady-state measurement must not calibrate the sync
+    twin (and vice versa): the book keys per (schedule, packed, pipelined)."""
+    recs = [
+        StepRecord(step=0, d=3, s=1, m=2, k=4, loads=(3,) * 4,
+                   schedule="gather", packed=True, compute_s=np.zeros(4),
+                   comm_s=np.zeros(4), measured_step_s=3.0),
+        StepRecord(step=1, d=3, s=1, m=2, k=4, loads=(3,) * 4,
+                   schedule="gather", packed=True, compute_s=np.zeros(4),
+                   comm_s=np.zeros(4), measured_step_s=1.0, pipelined=True),
+    ]
+    book = step_cost_book(recs)
+    assert book.cost(3, 4, (3,) * 4, "gather", True) == pytest.approx(3.0)
+    assert book.cost(3, 4, (3,) * 4, "gather", True,
+                     pipelined=True) == pytest.approx(1.0)
+
+
 def test_planner_step_cost_calibration_breaks_ties():
     """Measured step costs reorder schedules with identical modeled waits."""
     exact = FitResult(params=PAPER_N8, speeds=np.ones(8), n_steps=0,

@@ -11,7 +11,8 @@ Checks, over the `docs/` tree and `mkdocs.yml`:
      ``repro.coding.__all__``, ``repro.bench.__all__`` and
      ``repro.tune.__all__`` has a nonempty docstring, and an AST-level
      scan of ``src/repro/coding/*.py`` + ``src/repro/tune/*.py`` +
-     ``src/repro/train/coded_step.py`` + the documented ``repro.core``
+     ``src/repro/train/coded_step.py`` + ``src/repro/train/pipeline.py``
+     + the documented ``repro.core``
      modules (hetero, runtime_model, tradeoff, stability) finds no
      undocumented public module/class/function/method (the local mirror
      of the ruff ``D1`` rule scoped in pyproject.toml).
@@ -37,6 +38,7 @@ DOCSTRING_SCOPE = (
     + sorted((ROOT / "src/repro/tune").glob("*.py"))
     + [
         ROOT / "src/repro/train/coded_step.py",
+        ROOT / "src/repro/train/pipeline.py",
         ROOT / "src/repro/core/hetero.py",
         ROOT / "src/repro/core/runtime_model.py",
         ROOT / "src/repro/core/tradeoff.py",
