@@ -40,6 +40,7 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 import numpy as np
 
 from repro.bench import BenchResult, BenchSpec, capture_env, register
+from repro import coding
 from repro.configs import get_config
 from repro.core import make_code
 from repro.core.runtime_model import RuntimeParams
@@ -64,8 +65,8 @@ def _run_trainer(cfg, code, schedule, injector, steps, policy=None):
     """Drive a Trainer for `steps` steps; return (trainer, waits, walls)."""
     mesh = make_local_mesh(N_WORKERS, 1)
     tr = Trainer(cfg, code, mesh, optimizer=get_optimizer("sgd", 1e-2),
-                 schedule=schedule, injector=injector, autotune=policy,
-                 seed=0)
+                 spec=coding.SchemeSpec(schedule=schedule),
+                 straggler_source=injector, autotune=policy, seed=0)
     rng = np.random.default_rng(5)
     waits, walls = [], []
     for i in range(steps):

@@ -34,6 +34,7 @@ from repro.bench import (
     register,
     time_callable,
 )
+from repro import coding
 from repro.coding import get_schedule
 from repro.configs import get_config
 from repro.core import make_code
@@ -52,8 +53,8 @@ ARCH = "qwen3-1.7b"
 def _build(cfg, schedule: str, packed: bool):
     mesh = make_local_mesh(N_WORKERS, 1)
     opt = get_optimizer("sgd", 1e-2)
-    arts = make_coded_train_step(cfg, CODE, mesh, opt, schedule=schedule,
-                                 packed=packed)
+    spec = coding.SchemeSpec(schedule=schedule, packed=packed)
+    arts = make_coded_train_step(cfg, CODE, mesh, opt, spec=spec)
     rng = np.random.default_rng(0)
     placed = jax.tree.map(jnp.asarray,
                           CodedBatcher(CODE).place(

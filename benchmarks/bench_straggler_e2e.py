@@ -52,6 +52,7 @@ from repro.bench import (
     register,
     time_sequence,
 )
+from repro import coding
 from repro.configs import get_config
 from repro.core import make_code, make_hetero_code, plan_hetero
 from repro.bench.straggler import overlap_fraction
@@ -113,9 +114,9 @@ def _measure_scheme(cfg, code, schedule, backend, patterns, batch, params_init,
     """
     mesh = make_local_mesh(N_WORKERS, 1)
     opt = get_optimizer("sgd", 1e-2)
-    arts = make_coded_train_step(cfg, code, mesh, opt, schedule=schedule,
-                                 backend=backend, packed=packed,
-                                 partial=partial)
+    spec = coding.SchemeSpec(schedule=schedule, backend=backend,
+                             packed=packed, partial=partial)
+    arts = make_coded_train_step(cfg, code, mesh, opt, spec=spec)
     placed = jax.tree.map(jnp.asarray, CodedBatcher(code).place(batch))
     fn = arts.compiled(placed, donate=True)
     # donation invalidates the argument buffers on real accelerators: work
@@ -158,9 +159,9 @@ def _measure_pipelined(cfg, code, schedule, backend, patterns, batch,
     """
     mesh = make_local_mesh(N_WORKERS, 1)
     opt = get_optimizer("sgd", 1e-2)
-    arts = make_coded_train_step(cfg, code, mesh, opt, schedule=schedule,
-                                 backend=backend, packed=True,
-                                 pipelined=True, fuse_apply=True)
+    spec = coding.SchemeSpec(schedule=schedule, backend=backend, packed=True,
+                             pipelined=True, fuse_apply=True)
+    arts = make_coded_train_step(cfg, code, mesh, opt, spec=spec)
     placed = jax.tree.map(jnp.asarray, CodedBatcher(code).place(batch))
     cp = arts.compiled_pipeline(placed, donate=True)
     inputs = [arts.step_inputs(p.stragglers) for p in patterns]

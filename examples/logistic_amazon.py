@@ -32,6 +32,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks.bench_auc import auc_score
+    from repro import coding
     from repro.configs import get_config
     from repro.core import make_code
     from repro.core.runtime_model import (RuntimeParams, optimal_triple,
@@ -40,6 +41,7 @@ def main() -> None:
     from repro.launch.mesh import make_local_mesh
     from repro.optim import get_optimizer
     from repro.train import Trainer
+    from repro.tune import NoStragglers, RandomStragglers
 
     X, y, _ = synthetic_logistic_dataset(args.samples, args.dim, seed=0)
     ntr = int(args.samples * 0.75)
@@ -62,8 +64,11 @@ def main() -> None:
     gb = ntr - ntr % args.n
     results = {}
     for name, sc in schemes.items():
+        source = (RandomStragglers(seed=1) if sc["strag"] == "random"
+                  else NoStragglers())
         tr = Trainer(cfg, sc["code"], mesh, get_optimizer("nag", args.lr / gb),
-                     schedule=sc["schedule"], straggler_mode=sc["strag"])
+                     spec=coding.SchemeSpec(schedule=sc["schedule"]),
+                     straggler_source=source)
         aucs = []
         batch = {"x": Xtr[:gb].astype(np.float32), "y": ytr[:gb]}
         for it in range(args.iters):

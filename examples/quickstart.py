@@ -19,6 +19,7 @@ import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 
+from repro import coding  # noqa: E402
 from repro.compat import NATIVE_SHARD_MAP  # noqa: E402
 from repro.configs import get_config  # noqa: E402
 from repro.core import make_code, make_hetero_code  # noqa: E402
@@ -26,6 +27,7 @@ from repro.data import synthetic_lm_stream  # noqa: E402
 from repro.launch.mesh import make_local_mesh  # noqa: E402
 from repro.optim import get_optimizer  # noqa: E402
 from repro.train import Trainer  # noqa: E402
+from repro.tune import FixedStragglers, RandomStragglers  # noqa: E402
 
 
 def main() -> None:
@@ -39,10 +41,10 @@ def main() -> None:
     # old-jax shard_map cannot lower the model's scan-over-layers with a >1
     # GSPMD-auto model axis; collapse it there so the demo runs everywhere
     mesh = make_local_mesh(n_data=4, n_model=2 if NATIVE_SHARD_MAP else 1)
+    spec = coding.SchemeSpec(schedule="gather")   # paper-faithful decode
     trainer = Trainer(cfg, code, mesh,
-                      optimizer=get_optimizer("adamw", 3e-3),
-                      schedule="gather",          # paper-faithful decode
-                      straggler_mode="random")    # kill <= s workers per step
+                      optimizer=get_optimizer("adamw", 3e-3), spec=spec,
+                      straggler_source=RandomStragglers(seed=1))  # <= s/step
     stream = synthetic_lm_stream(cfg, global_batch=8, seq_len=64)
     logs = trainer.run(stream, steps=20, log_every=5)
     print(f"\ncoded fraction of gradient bytes: {trainer.arts.coded_fraction:.3f}")
@@ -55,8 +57,8 @@ def main() -> None:
     hcode = make_hetero_code(speeds=[0.5, 1.0, 1.0, 1.5], s=1, m=2)
     print(f"\n{hcode.describe()}")
     htrainer = Trainer(cfg, hcode, mesh,
-                       optimizer=get_optimizer("adamw", 3e-3),
-                       schedule="gather", straggler_mode="random")
+                       optimizer=get_optimizer("adamw", 3e-3), spec=spec,
+                       straggler_source=RandomStragglers(seed=1))
     logs = htrainer.run(stream, steps=10, log_every=5)
     print(f"hetero loads {hcode.loads}: loss {logs[0]['loss']:.3f} -> "
           f"{logs[-1]['loss']:.3f}")
@@ -66,8 +68,8 @@ def main() -> None:
     # partial step completes and certifies its gradient error instead.
     ptrainer = Trainer(cfg, hcode, mesh,
                        optimizer=get_optimizer("adamw", 3e-3),
-                       schedule="gather", partial=True,
-                       straggler_mode="fixed", fixed_stragglers=(0, 3))
+                       spec=spec.replace(partial=True),
+                       straggler_source=FixedStragglers((0, 3)))
     metrics = ptrainer.step(next(stream))
     print(f"\npartial step with {2} stragglers (s={hcode.s}): "
           f"loss {metrics['loss']:.3f}, certified gradient error bound "
@@ -84,10 +86,10 @@ def main() -> None:
     comm_heavy = RuntimeParams(n=n, lambda1=0.5, lambda2=0.2, t1=0.5, t2=16.0)
     comp_heavy = RuntimeParams(n=n, lambda1=0.5, lambda2=0.2, t1=16.0, t2=0.5)
     atrainer = Trainer(cfg, make_code(n, 4, 2, 2), mesh,
-                       optimizer=get_optimizer("adamw", 3e-3),
-                       schedule="gather",
-                       injector=DriftingSampler([(0, comm_heavy),
-                                                 (10, comp_heavy)], seed=3),
+                       optimizer=get_optimizer("adamw", 3e-3), spec=spec,
+                       straggler_source=DriftingSampler([(0, comm_heavy),
+                                                         (10, comp_heavy)],
+                                                        seed=3),
                        autotune=AutotunePolicy(interval=5, window=10,
                                                min_samples=5,
                                                schedules=("gather",)))

@@ -36,6 +36,7 @@ def main() -> None:
     os.environ.setdefault("XLA_FLAGS",
                           f"--xla_force_host_platform_device_count={ndev}")
 
+    from repro import coding
     from repro.compat import NATIVE_SHARD_MAP
     from repro.configs import get_config
     from repro.core import make_code
@@ -43,6 +44,7 @@ def main() -> None:
     from repro.launch.mesh import make_local_mesh
     from repro.optim import get_optimizer
     from repro.train import Trainer
+    from repro.tune import RandomStragglers
 
     base = get_config("qwen3-1.7b")
     if args.full_100m:
@@ -62,8 +64,9 @@ def main() -> None:
     code = make_code(args.n_data, args.d, args.s, args.m)
     mesh = make_local_mesh(args.n_data, args.n_model)
     trainer = Trainer(cfg, code, mesh, get_optimizer("adamw", 3e-4),
-                      schedule=args.schedule, backend=args.backend,
-                      straggler_mode="random")
+                      spec=coding.SchemeSpec(schedule=args.schedule,
+                                             backend=args.backend),
+                      straggler_source=RandomStragglers(seed=1))
     import jax
     n_params = sum(x.size for x in jax.tree.leaves(trainer.params))
     print(f"model {cfg.name}: {n_params / 1e6:.1f}M params; {code.describe()}")

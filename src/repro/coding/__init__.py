@@ -7,9 +7,10 @@
   decode   — gather / a2a / psum schedules (``schedules.py``)
   backends — ref einsum vs Pallas kernels, auto-dispatched (``backends.py``)
 
-Entry point: ``make_codec(code, schedule=..., backend=..., wire_dtype=...)``.
-``repro.core.coded_allreduce`` survives only as a deprecation shim over this
-package.
+Entry points: ``make_codec(code, schedule=..., backend=..., wire_dtype=...)``
+for the raw codec, and ``SchemeSpec`` (``spec.py``) — the frozen value object
+consolidating every scheme lever — consumed by ``make_coded_train_step``,
+the ``Trainer`` and the serving ``CodedServer`` alike.
 """
 from .backends import (BACKEND_NAMES, CodecBackend, PallasBackend, RefBackend,
                        resolve_backend)
@@ -23,10 +24,12 @@ from .plan import LeafPlan, coded_fraction, plan_leaf, plan_tree
 from .schedules import (SCHEDULES, AllToAllSchedule, GatherSchedule,
                         PsumSchedule, Schedule, decode_leaf_a2a,
                         decode_leaf_gather, get_schedule)
+from .spec import SPEC_FIELDS, SchemeSpec, resolve_scheme_spec
 from .wire import all_gather_wire, all_to_all_wire
 
 __all__ = [
     "Codec", "make_codec",
+    "SchemeSpec", "resolve_scheme_spec", "SPEC_FIELDS",
     "CodecBackend", "RefBackend", "PallasBackend", "resolve_backend",
     "BACKEND_NAMES",
     "Schedule", "GatherSchedule", "AllToAllSchedule", "PsumSchedule",

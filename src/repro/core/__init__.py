@@ -8,12 +8,10 @@ Public API:
   tradeoff                          — Theorem 1 feasibility helpers
   runtime_model                     — Section VI shifted-exponential model
   stability                         — Theorem 2 / condition-number machinery
-  coded_allreduce                   — DEPRECATED shim over ``repro.coding``
-                                      (the codec subsystem: plan / encode /
-                                      wire / decode with ref+pallas backends)
-                                      — imported lazily so its
-                                      DeprecationWarning fires only for
-                                      actual users of the old surface
+
+The pre-PR-1 ``coded_allreduce`` surface lived on here as a deprecation
+shim through PR 6 and was removed in PR 7 (no in-repo importers remained);
+use ``repro.coding`` directly.
 """
 from . import (cyclic, hetero, polynomial, random_code, runtime_model,
                stability, tradeoff)
@@ -23,15 +21,6 @@ from .schemes import GradCode, make_code, uncoded
 __all__ = [
     "GradCode", "make_code", "uncoded",
     "HeteroCode", "HeteroPlan", "make_hetero_code", "plan_hetero",
-    "coded_allreduce", "cyclic", "hetero", "polynomial", "random_code",
+    "cyclic", "hetero", "polynomial", "random_code",
     "runtime_model", "stability", "tradeoff",
 ]
-
-
-def __getattr__(name: str):
-    # the shim stays reachable as `repro.core.coded_allreduce`, but eager
-    # package import must not trigger (or swallow) its DeprecationWarning
-    if name == "coded_allreduce":
-        import importlib
-        return importlib.import_module(".coded_allreduce", __name__)
-    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

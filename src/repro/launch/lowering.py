@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import coding
 from repro.configs import get_config
 from repro.core import make_code
 from repro.models import api as model_api
@@ -82,9 +83,9 @@ def build_train_lowering(arch: str, shape_name: str, mesh, *,
     n = data_degree(mesh)
     code = code or default_code(n)
     opt = get_optimizer(optimizer, 1e-3)
-    arts = make_coded_train_step(cfg, code, mesh, opt, schedule=schedule,
-                                 encode_dtype=encode_dtype, backend=backend,
-                                 packed=packed, partial=partial)
+    spec = coding.SchemeSpec(schedule=schedule, encode_dtype=encode_dtype,
+                             backend=backend, packed=packed, partial=partial)
+    arts = make_coded_train_step(cfg, code, mesh, opt, spec=spec)
 
     pshapes = jax.eval_shape(lambda: model_api.init(jax.random.PRNGKey(0), cfg))
     oshapes = jax.eval_shape(opt.init, pshapes)

@@ -34,20 +34,25 @@ def main() -> None:
     os.environ.setdefault("XLA_FLAGS",
                           f"--xla_force_host_platform_device_count={ndev}")
 
+    from repro import coding
     from repro.configs import get_config
     from repro.core import make_code
     from repro.data import synthetic_lm_stream
     from repro.launch.mesh import make_local_mesh
     from repro.optim import get_optimizer
     from repro.train import Trainer
+    from repro.tune import FixedStragglers, NoStragglers, RandomStragglers
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     code = make_code(args.n_data, args.d, args.s, args.m)
     mesh = make_local_mesh(args.n_data, args.n_model)
+    source = {"none": NoStragglers(), "random": RandomStragglers(seed=1),
+              "fixed": FixedStragglers(())}[args.stragglers]
     trainer = Trainer(cfg, code, mesh, get_optimizer(args.optimizer, args.lr),
-                      schedule=args.schedule, straggler_mode=args.stragglers)
+                      spec=coding.SchemeSpec(schedule=args.schedule),
+                      straggler_source=source)
     gb = args.n_data * args.batch_per_subset
     stream = synthetic_lm_stream(cfg, gb, args.seq)
     logs = trainer.run(stream, args.steps, log_every=max(1, args.steps // 10),

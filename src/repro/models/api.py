@@ -75,6 +75,31 @@ def make_prefill(cfg, cache_len: int, *, window: int = 0):
     return fn
 
 
+def make_forward(cfg, *, window: int = 0):
+    """Returns fn(params, batch) -> per-request output, for coded serving.
+
+    One batched stateless forward pass: the unit of work the coded serving
+    engine shards across replicas.  For the linear family the output is the
+    ``(B,)`` logit vector; for LM families it is the ``(B, vocab)``
+    last-token logits of a full-prompt prefill (the cache is discarded —
+    coded serving replicates the *forward compute*, not decode state).
+    ``batch`` uses the same keys as :func:`make_loss` / :func:`make_prefill`.
+    """
+    mod = get_module(cfg)
+    if cfg.family == "linear":
+        def fn(params, batch):
+            return mod.logits(params, cfg, batch["x"])
+        return fn
+
+    def fn(params, batch):
+        key = "embeds" if cfg.family == "encdec" else "tokens"
+        cache_len = batch[key].shape[1]
+        logits, _ = make_prefill(cfg, cache_len, window=window)(params, batch)
+        return logits
+
+    return fn
+
+
 def make_decode(cfg, *, window: int = 0):
     """Returns fn(params, cache, token) -> (logits, new_cache)."""
     mod = get_module(cfg)

@@ -1,3 +1,38 @@
-from .engine import build_serve_artifacts, ServeArtifacts
+"""`repro.serving`: inference on the production mesh, coded and uncoded.
 
-__all__ = ["build_serve_artifacts", "ServeArtifacts"]
+Two surfaces:
+
+- the pjit/GSPMD decode path (``build_serve_artifacts`` /
+  ``BatchedEngine``) — every zoo arch's prefill + decode lowered on the
+  training mesh and sharding rules;
+- the coded inference engine (``CodedServer`` + ``make_coded_forward``) —
+  the paper's ``(d, s, m)`` codes applied to batched forward passes:
+  replicas compute ``d`` coded shards of the activations, the engine
+  decodes the batch from the fastest ``n - s`` replicas (hedging; the
+  disjoint-block decode identity makes the recovery exact and bit-wise
+  independent of straggler payloads), ``partial`` specs serve past-``s``
+  failures under the :class:`ServeSLO` error bound, and per-batch
+  telemetry drives the ``repro.tune`` p99 re-planner.
+
+Both the server and ``make_coded_train_step`` construct from one
+:class:`repro.coding.SchemeSpec` — a single value object defines the
+scheme for training and serving.  See ``docs/serving.md``.
+"""
+from .batcher import Request, RequestBatcher
+from .coded import ForwardArtifacts, failed_request_rows, make_coded_forward
+from .engine import (BatchedEngine, BatchResult, CodedServer, ServeArtifacts,
+                     ServeSLO, build_serve_artifacts)
+
+__all__ = [
+    "BatchResult",
+    "BatchedEngine",
+    "CodedServer",
+    "ForwardArtifacts",
+    "Request",
+    "RequestBatcher",
+    "ServeArtifacts",
+    "ServeSLO",
+    "build_serve_artifacts",
+    "failed_request_rows",
+    "make_coded_forward",
+]

@@ -1,13 +1,20 @@
-"""Serving layer: sharded prefill / decode steps + a small batched-request
-engine for the examples.
+"""Serving layer: sharded prefill / decode steps, a small batched-request
+engine for the examples, and the coded inference server.
 
-Serving is pure pjit/GSPMD (no shard_map): gradient coding is a training-
-time technique; the serving path exercises the same model zoo, meshes and
-sharding rules so every (arch x decode shape) lowers on the production mesh.
+The pjit/GSPMD surface (``build_serve_artifacts`` / ``BatchedEngine``)
+exercises the model zoo's decode path on the production mesh.  The
+:class:`CodedServer` is the paper's scheme applied to *inference*: batched
+forward passes ride the coded replica layout of
+:mod:`repro.serving.coded`, the engine decodes from the fastest ``n - s``
+replicas (hedging — straggler payloads provably never reach the output),
+and the same telemetry -> MLE -> re-plan loop that adapts training
+(:mod:`repro.tune`) re-ranks ``(d, s, m) x schedule`` by modeled p99 under
+a Poisson arrival process at serve time.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable
 
 import jax
@@ -17,14 +24,23 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import coding
+from repro.core import make_code
+from repro.data import CodedBatcher
 from repro.models import api as model_api
 from repro.train import sharding
+
+from .batcher import Request, RequestBatcher
+from .coded import ForwardArtifacts, failed_request_rows, make_coded_forward
 
 PyTree = Any
 
 
 @dataclasses.dataclass(frozen=True)
 class ServeArtifacts:
+    """Jitted pjit serving surface for one arch x shape: prefill + decode
+    callables and the shardings/shapes drivers need to feed them."""
+
     prefill: Callable | None
     decode: Callable
     param_shardings: PyTree
@@ -130,3 +146,192 @@ class BatchedEngine:
                 logits, cache = self.arts.decode(self.params, cache, tok)
                 tok = jnp.argmax(logits, -1).astype(jnp.int32)
         return np.stack(outs, axis=1)
+
+
+# ------------------------------------------------------------ coded server
+@dataclasses.dataclass(frozen=True)
+class ServeSLO:
+    """The bounded-error service-level objective for degraded serving.
+
+    Inside the design budget (``<= s`` stragglers) decode is exact and the
+    SLO is trivially met.  Past it, a ``partial`` server returns the
+    least-squares decode and its error certificate; a batch is within SLO
+    iff the certified L2 bound stays under ``max_decode_err`` — callers
+    decide whether out-of-SLO batches are retried or surfaced degraded.
+    """
+
+    max_decode_err: float = float("inf")
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchResult:
+    """One served batch: decoded outputs + the hedge/degradation evidence.
+
+    ``outputs`` is ``(valid, *out_shape)`` — padding rows already dropped;
+    ``requests`` aligns row-for-row when the batch came through the
+    request queue (empty for raw ``serve_batch`` calls).  ``stragglers``
+    is the replica set the engine did *not* wait for; ``failed_rows`` the
+    request rows whose subset lost every holder (only possible past the
+    design ``s`` in partial mode — exact serves always return it empty).
+    """
+
+    outputs: np.ndarray
+    requests: tuple[Request, ...]
+    stragglers: tuple[int, ...]
+    err_bound: float
+    within_slo: bool
+    failed_rows: tuple[int, ...]
+    wall_s: float
+
+
+class CodedServer:
+    """Batched coded-inference engine over the replica mesh.
+
+    Construction mirrors the ``Trainer``: one
+    :class:`repro.coding.SchemeSpec` instance (the *same* object a
+    ``make_coded_train_step`` call accepts) fixes the scheme levers, and a
+    :class:`repro.tune.StragglerSource` supplies per-batch straggler sets
+    — at serve time that is the hedging decision: the engine decodes from
+    the fastest ``n - len(stragglers)`` replicas and the stragglers'
+    payloads provably never influence the output bits.
+
+    With ``autotune=``\\ :class:`repro.tune.ServingPolicy` the server runs
+    the serving twin of the training auto-tuner: every served batch feeds
+    a :class:`~repro.tune.StepRecord` (per-replica timings from the timed
+    source + measured forward wall-clock) to a
+    :class:`~repro.tune.ServingAutotuner`, which re-fits the Section-VI
+    model and re-ranks the uniform ``(d, s, m) x schedule`` family by
+    modeled p99 sojourn under the policy's Poisson arrival process.
+    Adopted plans swap the code/codec through a per-scheme artifact cache
+    (uniform family only: ``k = n`` is pinned so the engine batch
+    ``B = k * b`` never changes mid-flight).
+    """
+
+    def __init__(self, cfg, code, mesh, params, *,
+                 spec: coding.SchemeSpec | None = None,
+                 batch_per_subset: int = 1,
+                 straggler_source=None,
+                 slo: ServeSLO | None = None,
+                 autotune=None,
+                 seq_len: int = 128,
+                 window: int = 0):
+        """Bind model, code, mesh and scheme; build the first codec."""
+        from repro.tune import ServingAutotuner, as_straggler_source
+        self.cfg = cfg
+        self.mesh = mesh
+        self.params = params
+        self.spec = spec if spec is not None else coding.SchemeSpec()
+        self.slo = slo if slo is not None else ServeSLO()
+        self.seq_len = seq_len
+        self.window = window
+        self.b = int(batch_per_subset)
+        self.code = code
+        self._source = as_straggler_source(straggler_source)
+        if autotune is not None and not self._source.provides_times:
+            raise ValueError(
+                "autotune needs per-worker timings: pass a timed "
+                "straggler_source= (e.g. a repro.tune.ShiftedExpSampler or "
+                "a replica heartbeat feed)")
+        k = getattr(code, "num_subsets", code.n)
+        self.batch_requests = k * self.b
+        self.batcher = RequestBatcher(self.batch_requests)
+        self._arts: dict[tuple, ForwardArtifacts] = {}
+        self._placer = CodedBatcher(code)
+        self._tuner = (ServingAutotuner(autotune, self.batch_requests)
+                       if autotune is not None else None)
+        self._served = 0
+        self._next_id = 0
+
+    # ---- scheme plumbing ------------------------------------------------
+    def _scheme_key(self) -> tuple:
+        code = self.code
+        return (code.n, code.d, code.s, code.m, self.spec.schedule,
+                self.spec.packed, self.spec.partial, str(self.spec.backend),
+                self.spec.encode_dtype)
+
+    @property
+    def artifacts(self) -> ForwardArtifacts:
+        """The active scheme's forward artifacts (built once per scheme —
+        returning to a previously served scheme does not retrace)."""
+        key = self._scheme_key()
+        if key not in self._arts:
+            self._arts[key] = make_coded_forward(
+                self.cfg, self.code, self.mesh, spec=self.spec,
+                batch_per_subset=self.b, seq_len=self.seq_len,
+                window=self.window)
+        return self._arts[key]
+
+    def _apply_plan(self, plan) -> None:
+        """Adopt a ranked serve plan: swap code + schedule, keep B fixed."""
+        n = self.code.n
+        self.code = make_code(n, plan.d, plan.s, plan.m)
+        self.spec = self.spec.replace(schedule=plan.schedule)
+        self._placer = CodedBatcher(self.code)
+
+    # ---- request-queue surface -----------------------------------------
+    def submit(self, payload: dict, arrival_s: float = 0.0) -> int:
+        """Enqueue one request payload; returns its request id."""
+        self._next_id += 1
+        self.batcher.add(Request(self._next_id, payload, arrival_s))
+        return self._next_id
+
+    def step(self) -> BatchResult | None:
+        """Serve one batch from the queue (None when nothing is queued)."""
+        if not len(self.batcher):
+            return None
+        reqs, batch, valid = self.batcher.next_batch()
+        res = self.serve_batch(batch, valid=valid)
+        return dataclasses.replace(res, requests=tuple(reqs))
+
+    # ---- the coded forward ---------------------------------------------
+    def serve_batch(self, batch: dict, valid: int | None = None,
+                    stragglers=None) -> BatchResult:
+        """Run one coded forward over a ``(B, ...)`` batch dict.
+
+        ``stragglers`` overrides the straggler source (tests drive exact
+        patterns through it); ``valid`` trims padding rows from the
+        returned outputs.  Per-batch telemetry feeds the serving
+        auto-tuner when one is configured.
+        """
+        from repro.tune import record_from_times
+        arts = self.artifacts
+        code = arts.codec.code
+        times = None
+        if stragglers is None:
+            draw = self._source.draw(self._served, code)
+            stragglers, times = list(draw.stragglers), draw.times
+        else:
+            stragglers = list(stragglers)
+        inp = arts.step_inputs(stragglers)
+        placed = jax.tree.map(jnp.asarray, self._placer.place(batch))
+        fn = arts.compiled(placed)
+        args = (self.params, placed, inp["W"], inp["mask"], inp["rho"])
+        if arts.partial:
+            args = args + (inp["err_factor"],)
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        wall = time.perf_counter() - t0
+        if arts.partial:
+            out, bound = out
+            err_bound = float(bound)
+        else:
+            err_bound = 0.0
+        failed = tuple(failed_request_rows(code, stragglers, self.b))
+        self._served += 1
+        if self._tuner is not None and times is not None:
+            self._tuner.record(record_from_times(
+                self._served, code, self.spec.schedule, self.spec.packed,
+                times, n_drop=len(stragglers), measured_step_s=wall))
+            plan = self._tuner.maybe_replan(self._served)
+            if plan is not None:
+                self._apply_plan(plan)
+        nvalid = self.batch_requests if valid is None else int(valid)
+        return BatchResult(
+            outputs=np.asarray(out)[:nvalid],
+            requests=(),
+            stragglers=tuple(int(i) for i in stragglers),
+            err_bound=err_bound,
+            within_slo=err_bound <= self.slo.max_decode_err,
+            failed_rows=failed,
+            wall_s=wall)

@@ -30,7 +30,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-import warnings
 from typing import Any, Callable
 
 import jax
@@ -78,6 +77,7 @@ class StepArtifacts:
     partial: bool = False
     pipelined: bool = False
     fuse_apply: bool = False
+    spec: "coding.SchemeSpec | None" = None  # the resolved scheme levers
     pipeline: Callable | None = None   # (batch_shapes) -> PipelineFns
     # memoized jitted executables, keyed by (batch signature, donate): the
     # bench's donated steady-state step and the autotuner's telemetry step
@@ -229,15 +229,15 @@ def pipelining_supported(mesh, schedule: str = "gather") -> bool:
 
 
 def make_coded_train_step(cfg, code: GradCode, mesh, optimizer: Optimizer,
-                          *, schedule: str = "gather",
+                          *, spec: coding.SchemeSpec | None = None,
                           grad_scale: float | None = None,
-                          encode_dtype: str = "float32",
-                          backend: str | coding.CodecBackend = "auto",
-                          packed: bool = True,
-                          partial: bool = False,
-                          pipelined: bool = False,
-                          fuse_apply: bool | None = None,
-                          use_kernels: bool | None = None) -> StepArtifacts:
+                          schedule: str | None = None,
+                          encode_dtype: str | None = None,
+                          backend: str | coding.CodecBackend | None = None,
+                          packed: bool | None = None,
+                          partial: bool | None = None,
+                          pipelined: bool | None = None,
+                          fuse_apply: bool | None = None) -> StepArtifacts:
     """Build the shard_map'd coded train step for one architecture.
 
     code: a uniform :class:`~repro.core.schemes.GradCode` or a heterogeneous
@@ -245,18 +245,25 @@ def make_coded_train_step(cfg, code: GradCode, mesh, optimizer: Optimizer,
     count is ``code.d`` (the max per-worker load for hetero plans, whose
     padded slots carry zero encode/rho weight).
 
+    spec: a :class:`repro.coding.SchemeSpec` bundling every scheme lever —
+    the same instance a ``CodedServer`` accepts, so train and serve run one
+    scheme from one value.  The per-lever kwargs below are the deprecated
+    spelling (``DeprecationWarning``; cannot be combined with ``spec=``)
+    and produce bitwise-identical artifacts to the equivalent spec.
+
     grad_scale: decoded gradients are multiplied by this (default 1/k with
     k = ``code.num_subsets`` so the update equals uncoded *mean*-gradient
     descent when per-subset losses are means; the paper's linear workload
-    uses sum losses and scale 1).
+    uses sum losses and scale 1).  Workload-specific, hence not a spec
+    lever.
 
     encode_dtype: wire dtype of the transmitted encodings (the paper uses
     f32; "bfloat16" halves the collective bytes at ~3 decimal digits of
     gradient precision — a beyond-paper lever recorded in §Perf).
 
     backend: codec compute backend — "auto" | "ref" | "pallas" | "interpret"
-    or a ``coding.CodecBackend`` instance.  use_kernels is the deprecated
-    boolean spelling of the same choice (True -> "pallas").
+    or a ``coding.CodecBackend`` instance.  (The pre-PR-1 ``use_kernels``
+    boolean is gone; ``SchemeSpec.backend`` is the one spelling.)
 
     packed (default True): aggregate coded leaves through the bucketed flat
     wire buffers of ``repro.coding.packing`` — O(1) collectives and one
@@ -296,10 +303,14 @@ def make_coded_train_step(cfg, code: GradCode, mesh, optimizer: Optimizer,
     order (~1e-6 relative drift), so the default (None) resolves to False
     and the fully bit-exact path stays the default.  Pipelined-only.
     """
-    if use_kernels is not None:
-        warnings.warn("use_kernels is deprecated; pass backend='pallas' "
-                      "(or 'ref') instead", DeprecationWarning, stacklevel=2)
-        backend = "pallas" if use_kernels else "ref"
+    spec = coding.resolve_scheme_spec(
+        spec, dict(schedule=schedule, backend=backend, packed=packed,
+                   partial=partial, pipelined=pipelined,
+                   fuse_apply=fuse_apply, encode_dtype=encode_dtype),
+        caller="make_coded_train_step")
+    schedule, backend = spec.schedule, spec.backend
+    packed, partial, pipelined = spec.packed, spec.partial, spec.pipelined
+    encode_dtype, fuse_apply = spec.encode_dtype, spec.fuse_apply
     data_axes = _data_axes(mesh)
     n = _axis_prod(mesh, data_axes)
     if code.n != n:
@@ -749,5 +760,5 @@ def make_coded_train_step(cfg, code: GradCode, mesh, optimizer: Optimizer,
                          pack_plan=pplan,
                          loads=tuple(getattr(code, "loads", (code.d,) * n)),
                          partial=partial, pipelined=pipelined,
-                         fuse_apply=fuse,
+                         fuse_apply=fuse, spec=spec,
                          pipeline=make_pipeline if pipelined else None)

@@ -2,15 +2,25 @@
 simulation, telemetry, and (optional) checkpointing + auto-tuning into a run
 loop.
 
-Stragglers: each step draws a straggler set (up to the code's s) from a
-configurable process (none / fixed / random), computes the host-side float64
-decode weights for that responder pattern, and feeds them to the jitted step
-(the device graph is static across patterns).
+Scheme levers arrive as one ``repro.coding.SchemeSpec``
+(``Trainer(spec=...)`` — the same instance a ``repro.serving.CodedServer``
+accepts); the legacy per-lever kwargs (``schedule``/``backend``/``packed``/
+``partial``/``pipelined``) fold into a spec with a ``DeprecationWarning``.
+
+Stragglers: each step draws a straggler set from the trainer's
+``straggler_source`` (the ``repro.tune.StragglerSource`` protocol shared
+with the serving engine's hedging loop: ``NoStragglers`` default,
+``FixedStragglers``, ``RandomStragglers``, or a timings-backed
+``TimedSource``), computes the host-side float64 decode weights for that
+responder pattern, and feeds them to the jitted step (the device graph is
+static across patterns).  The legacy ``straggler_mode``/
+``fixed_stragglers``/``injector`` fields map onto the protocol with a
+``DeprecationWarning``.
 
 Auto-tuning (``autotune=AutotunePolicy(...)``): the trainer records per-step
-telemetry — per-worker compute/communication durations from the ``injector``
-(a ``(step, code) -> WorkerTimes`` callable such as
-``repro.tune.DriftingSampler``; on a real cluster, worker heartbeats), the
+telemetry — per-worker compute/communication durations from a timed
+straggler source (wrapping a ``(step, code) -> WorkerTimes`` callable such
+as ``repro.tune.DriftingSampler``; on a real cluster, worker heartbeats), the
 induced straggler set, and the measured step wall-clock — and every
 ``policy.interval`` steps refits the Section-VI shifted-exponential model
 and re-ranks the feasible (d, s, m) x schedule x packed space
@@ -34,7 +44,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.coding import make_step_inputs
+from repro.coding import SchemeSpec, make_step_inputs, resolve_scheme_spec
 from repro.compat import set_mesh
 from repro.core import GradCode, make_code, make_hetero_code
 from repro.data import CodedBatcher
@@ -50,30 +60,95 @@ class Trainer:
     code: GradCode
     mesh: Any
     optimizer: Optimizer
-    schedule: str = "gather"
-    backend: str = "auto"              # codec backend: auto | ref | pallas
-    packed: bool = True                # bucketed wire buffers (coded_step)
-    partial: bool = False              # partial-recovery decode past s
-    pipelined: bool = False            # async double-buffered wire (stale-1)
-    straggler_mode: str = "none"       # none | random | fixed
-    fixed_stragglers: tuple = ()
-    injector: Callable | None = None   # (step, code) -> WorkerTimes telemetry
+    # the scheme levers: one SchemeSpec (shared with CodedServer) — the
+    # per-lever fields below it are the deprecated spelling and fold into
+    # the spec with a DeprecationWarning
+    spec: SchemeSpec | None = None
+    schedule: str | None = None        # deprecated: SchemeSpec.schedule
+    backend: str | None = None         # deprecated: SchemeSpec.backend
+    packed: bool | None = None         # deprecated: SchemeSpec.packed
+    partial: bool | None = None        # deprecated: SchemeSpec.partial
+    pipelined: bool | None = None      # deprecated: SchemeSpec.pipelined
+    # the straggler process: one StragglerSource (shared with CodedServer's
+    # hedging loop) — the three legacy fields map onto it
+    straggler_source: Any | None = None
+    straggler_mode: str | None = None  # deprecated: none | random | fixed
+    fixed_stragglers: tuple = ()       # deprecated: FixedStragglers(...)
+    injector: Callable | None = None   # deprecated: TimedSource(injector)
     autotune: Any | None = None        # repro.tune.AutotunePolicy
     seed: int = 0
     checkpoint_dir: str | None = None
     checkpoint_every: int = 0
 
     def __post_init__(self):
+        import warnings
+
         from repro.models import api as model_api
-        if self.autotune is not None and self.injector is None:
+        from repro.tune.stragglers import (FixedStragglers, NoStragglers,
+                                           RandomStragglers, TimedSource,
+                                           as_straggler_source)
+        self.spec = resolve_scheme_spec(
+            self.spec,
+            dict(schedule=self.schedule, backend=self.backend,
+                 packed=self.packed, partial=self.partial,
+                 pipelined=self.pipelined),
+            caller="Trainer")
+        # mutable mirrors of the active scheme (the autotuner swaps them and
+        # `self.spec` together through _apply_plan)
+        self.schedule = self.spec.schedule
+        self.backend = self.spec.backend
+        self.packed = self.spec.packed
+        self.partial = self.spec.partial
+        self.pipelined = self.spec.pipelined
+
+        legacy_straggler = (self.straggler_mode is not None
+                            or bool(self.fixed_stragglers)
+                            or self.injector is not None)
+        if self.straggler_source is not None and legacy_straggler:
             raise ValueError(
-                "autotune needs per-worker timings: pass injector= (e.g. a "
-                "repro.tune.ShiftedExpSampler, or a cluster heartbeat feed)")
-        if self.injector is not None and self.straggler_mode != "none":
+                "pass either straggler_source= or the deprecated "
+                "straggler_mode=/fixed_stragglers=/injector= fields, "
+                "not both")
+        if (self.injector is not None
+                and self.straggler_mode not in (None, "none")):
             raise ValueError(
                 "injector= is its own straggler source (the slowest s "
                 "workers of each draw are dropped); it cannot be combined "
                 f"with straggler_mode={self.straggler_mode!r}")
+        if self.straggler_source is not None:
+            self._source = as_straggler_source(self.straggler_source)
+        elif self.injector is not None:
+            warnings.warn(
+                "Trainer(injector=...) is deprecated; pass "
+                "straggler_source=repro.tune.TimedSource(injector) (or the "
+                "injector itself as straggler_source=)",
+                DeprecationWarning, stacklevel=3)
+            self._source = TimedSource(self.injector)
+        elif legacy_straggler:
+            warnings.warn(
+                "Trainer(straggler_mode=/fixed_stragglers=) is deprecated; "
+                "pass straggler_source= (repro.tune.NoStragglers / "
+                "FixedStragglers / RandomStragglers)",
+                DeprecationWarning, stacklevel=3)
+            mode = self.straggler_mode or "fixed"
+            if mode == "none":
+                self._source = NoStragglers()
+            elif mode == "fixed":
+                self._source = FixedStragglers(self.fixed_stragglers)
+            elif mode == "random":
+                # same RNG discipline as the legacy inline draw: a private
+                # Generator seeded at seed + 1
+                self._source = RandomStragglers(self.seed + 1)
+            else:
+                raise ValueError(f"unknown straggler_mode {mode!r}")
+        else:
+            self._source = NoStragglers()
+        if self.autotune is not None and not self._source.provides_times:
+            raise ValueError(
+                "autotune needs per-worker timings: pass a timed "
+                "straggler_source= (e.g. a repro.tune.ShiftedExpSampler or "
+                "a cluster heartbeat feed — the deprecated injector= "
+                "spelling also works)")
         self._arts_cache: dict[tuple, Any] = {}
         self.arts = self._get_arts(self.code, self.schedule, self.packed,
                                    self.pipelined)
@@ -84,7 +159,6 @@ class Trainer:
             self.params = model_api.init(key, self.cfg)
             self.opt_state = self.optimizer.init(self.params)
         self._jitted = {}
-        self._rng = np.random.default_rng(self.seed + 1)
         self._step_count = 0
         self._tuner = None
         self.telemetry = None
@@ -93,7 +167,7 @@ class Trainer:
             self._tuner = Autotuner(self.autotune,
                                     current=self._current_plan())
             self.telemetry = self._tuner.telemetry
-        elif self.injector is not None:
+        elif self._source.provides_times:
             from repro.tune import TelemetryLog
             self.telemetry = TelemetryLog()
         self._ckpt = None
@@ -132,8 +206,8 @@ class Trainer:
         if key not in self._arts_cache:
             self._arts_cache[key] = make_coded_train_step(
                 self.cfg, code, self.mesh, self.optimizer,
-                schedule=schedule, backend=self.backend, packed=packed,
-                partial=self.partial, pipelined=pipelined)
+                spec=self.spec.replace(schedule=schedule, packed=packed,
+                                       pipelined=pipelined))
         return self._arts_cache[key]
 
     def _current_plan(self):
@@ -175,6 +249,9 @@ class Trainer:
         self.schedule = plan.schedule
         self.packed = plan.packed
         self.pipelined = getattr(plan, "pipelined", False)
+        self.spec = self.spec.replace(schedule=self.schedule,
+                                      packed=self.packed,
+                                      pipelined=self.pipelined)
         self.arts = self._get_arts(code, plan.schedule, plan.packed,
                                    self.pipelined)
         self.batcher = CodedBatcher(code)
@@ -200,14 +277,6 @@ class Trainer:
                             {"arch": self.cfg.name})
 
     # ---------------------------------------------------------------- steps
-    def _stragglers(self) -> list[int]:
-        if self.straggler_mode == "none" or self.code.s == 0:
-            return []
-        if self.straggler_mode == "fixed":
-            return list(self.fixed_stragglers)
-        k = self._rng.integers(0, self.code.s + 1)
-        return list(self._rng.choice(self.code.n, size=k, replace=False))
-
     def step(self, batch: dict[str, np.ndarray]) -> dict[str, float]:
         placed = self.batcher.place(batch)
         fn = None
@@ -223,13 +292,9 @@ class Trainer:
                 self._jitted[keyshape] = jax.jit(smapped,
                                                  donate_argnums=(0, 1))
             fn = self._jitted[keyshape]
-        times = None
-        if self.injector is not None:
-            times = self.injector(self._step_count, self.code)
-            stragglers, _ = times.order_stat(self.code.s)
-            stragglers = list(stragglers)
-        else:
-            stragglers = self._stragglers()
+        draw = self._source.draw(self._step_count, self.code)
+        stragglers = list(draw.stragglers)
+        times = draw.times
         inp = make_step_inputs(self.code, stragglers, partial=self.partial)
         args = [jnp.asarray(inp["W"]), jnp.asarray(inp["mask"]),
                 jnp.asarray(inp["rho"])]

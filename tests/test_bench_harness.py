@@ -33,12 +33,12 @@ def _results_for(name: str):
 def test_registry_has_all_targets():
     assert set(REGISTRY) == {"table1", "stability", "fig3", "auc",
                              "throughput", "straggler", "roofline",
-                             "coding_packed", "autotune"}
+                             "coding_packed", "autotune", "serving"}
 
 
 @pytest.mark.parametrize("name", sorted(
     {"table1", "stability", "fig3", "auc", "throughput", "straggler",
-     "roofline", "coding_packed", "autotune"}))
+     "roofline", "coding_packed", "autotune", "serving"}))
 def test_quick_bench_runs_and_validates(name, tmp_path):
     results = _results_for(name)
     assert results, f"{name} emitted no results"
@@ -72,6 +72,20 @@ def test_straggler_bench_reports_m_gt1_speedup():
     assert r.metrics["speedup_pipelined_vs_sync"] > 1.0
     if r.metrics["pipelining_supported"]:
         assert r.metrics["pipelined_measured_steady_s"] > 0.0
+
+
+def test_serving_bench_gates_p99_speedup():
+    """Acceptance: the serving bench runs the real jitted coded forward and
+    shows a coded-over-replicated p99 sojourn speedup > 1x under the
+    comm-heavy Sec-VI injection, with the hedge bit-exact and the serving
+    planner preferring an m>1 plan over full replication."""
+    (r,) = _results_for("serving")
+    assert r.metrics["speedup_coded_vs_replicated_p99"] > 1.0
+    assert r.metrics["speedup_coded_vs_replicated_p50"] > 1.0
+    assert r.metrics["hedged_decode_bitexact"] == 1.0
+    assert r.metrics["serving_planner_prefers_coded"] == 1.0
+    if r.metrics["real_forward_coded"]:
+        assert r.metrics["measured_forward_s_coded"] > 0.0
 
 
 def test_validator_rejects_bad_results():

@@ -36,8 +36,10 @@ def _step_outputs(schedule: str, backend: str, wire: str):
     cfg = _linear_cfg()
     mesh = make_local_mesh(4, 1)
     opt = get_optimizer("sgd", 1e-2)
-    arts = make_coded_train_step(cfg, CODE, mesh, opt, schedule=schedule,
-                                 backend=backend, encode_dtype=wire)
+    arts = make_coded_train_step(
+        cfg, CODE, mesh, opt,
+        spec=coding.SchemeSpec(schedule=schedule, backend=backend,
+                               encode_dtype=wire))
     rng = np.random.default_rng(5)
     batch = make_synthetic_batch(rng, cfg, 16, 0)
     placed = jax.tree.map(jnp.asarray, CodedBatcher(CODE).place(batch))
@@ -102,8 +104,8 @@ def test_pallas_backend_executes_kernels(monkeypatch):
     cfg = _linear_cfg()
     mesh = make_local_mesh(4, 1)
     opt = get_optimizer("sgd", 1e-2)
-    arts = make_coded_train_step(cfg, CODE, mesh, opt, schedule="gather",
-                                 backend="pallas")
+    arts = make_coded_train_step(cfg, CODE, mesh, opt,
+                                 spec=coding.SchemeSpec(backend="pallas"))
     assert arts.codec.backend.name == "pallas"
     rng = np.random.default_rng(5)
     placed = jax.tree.map(jnp.asarray, CodedBatcher(CODE).place(
@@ -128,15 +130,20 @@ def test_pallas_backend_executes_kernels(monkeypatch):
     assert calls["encode"] == 0 and calls["decode"] == 0
 
 
-def test_use_kernels_is_deprecated_but_wired():
+def test_use_kernels_flag_is_gone():
+    """The pre-PR-1 boolean was retired in favour of SchemeSpec.backend:
+    passing it must fail loudly (TypeError), not silently no-op."""
     cfg = _linear_cfg()
     mesh = make_local_mesh(4, 1)
     opt = get_optimizer("sgd", 1e-2)
-    with pytest.warns(DeprecationWarning):
-        arts = make_coded_train_step(cfg, CODE, mesh, opt, use_kernels=True)
+    with pytest.raises(TypeError, match="use_kernels"):
+        make_coded_train_step(cfg, CODE, mesh, opt, use_kernels=True)
+    # the replacement spelling selects the same backends
+    arts = make_coded_train_step(
+        cfg, CODE, mesh, opt, spec=coding.SchemeSpec(backend="pallas"))
     assert arts.codec.backend.name == "pallas"
-    with pytest.warns(DeprecationWarning):
-        arts = make_coded_train_step(cfg, CODE, mesh, opt, use_kernels=False)
+    arts = make_coded_train_step(
+        cfg, CODE, mesh, opt, spec=coding.SchemeSpec(backend="ref"))
     assert arts.codec.backend.name == "ref"
 
 
@@ -205,21 +212,17 @@ def test_unknown_backend_and_schedule_rejected():
         coding.make_codec(CODE, schedule="nope")
 
 
-def test_shim_reexports_coding_package():
-    """core.coded_allreduce survives only as a shim over repro.coding —
-    reachable lazily (eager `import repro.core` must not pull it in) and
-    warning loudly on actual import."""
+def test_coded_allreduce_shim_removed():
+    """The core.coded_allreduce deprecation shim (PR 1-6) is gone: the old
+    module neither imports nor resolves as an attribute of repro.core."""
     import importlib
     import sys
-    import warnings
+
+    import repro.core as core
 
     sys.modules.pop("repro.core.coded_allreduce", None)
-    with warnings.catch_warnings(record=True) as rec:
-        warnings.simplefilter("always")
-        ca = importlib.import_module("repro.core.coded_allreduce")
-    assert any(issubclass(w.category, DeprecationWarning) for w in rec)
-    assert ca.LeafPlan is coding.LeafPlan
-    assert ca.plan_tree is coding.plan_tree
-    assert ca.make_step_inputs is coding.make_step_inputs
-    assert ca.encode_leaf is coding.encode_leaf
-    assert ca.decode_tree is coding.decode_tree
+    with pytest.raises(ModuleNotFoundError):
+        importlib.import_module("repro.core.coded_allreduce")
+    with pytest.raises(AttributeError):
+        core.coded_allreduce  # noqa: B018 — attribute access is the test
+    assert "coded_allreduce" not in core.__all__

@@ -17,7 +17,9 @@ import pytest
 from repro.compat import NATIVE_SHARD_MAP
 from repro.configs import get_config
 from repro.core import make_code
+import repro.coding as coding
 from repro.coding import make_step_inputs
+from repro.tune import RandomStragglers
 from repro.data import CodedBatcher, make_synthetic_batch
 from repro.launch.mesh import make_local_mesh
 from repro.models import api as model_api
@@ -40,7 +42,8 @@ def _compiled(arch: str, schedule: str):
     cfg = get_config(arch).reduced()
     mesh = make_local_mesh(4, MS)
     opt = get_optimizer("sgd", 1e-2)
-    arts = make_coded_train_step(cfg, CODE, mesh, opt, schedule=schedule)
+    arts = make_coded_train_step(cfg, CODE, mesh, opt,
+                                 spec=coding.SchemeSpec(schedule=schedule))
     rng = np.random.default_rng(0)
     batch = make_synthetic_batch(rng, cfg, 8, 16)
     placed = CodedBatcher(CODE).place(batch)
@@ -109,8 +112,8 @@ def test_bf16_wire_close_to_f32():
     inp = make_step_inputs(CODE, [2])
     outs = {}
     for ed in ("float32", "bfloat16"):
-        arts = make_coded_train_step(cfg, CODE, mesh, opt, schedule="gather",
-                                     encode_dtype=ed)
+        arts = make_coded_train_step(cfg, CODE, mesh, opt,
+                                     spec=coding.SchemeSpec(encode_dtype=ed))
         smapped, _, _ = arts.step(shapes)
         p2, _, _ = jax.jit(smapped)(params, opt.init(params), placed,
                                     jnp.asarray(inp["W"]),
@@ -131,7 +134,7 @@ def test_trainer_loss_decreases():
     cfg = get_config("qwen3-1.7b").reduced()
     tr = Trainer(cfg, CODE, make_local_mesh(4, MS),
                  get_optimizer("adamw", 3e-3),
-                 schedule="gather", straggler_mode="random", seed=0)
+                 straggler_source=RandomStragglers(seed=1), seed=0)
     rng = np.random.default_rng(0)
     fixed = make_synthetic_batch(rng, cfg, 8, 16)   # overfit one batch
     losses = [tr.step(fixed)["loss"] for _ in range(10)]
@@ -143,7 +146,7 @@ def test_trainer_linear_paper_workload():
     cfg = dataclasses.replace(get_config("logistic-paper"), d_model=64)
     tr = Trainer(cfg, CODE, make_local_mesh(4, 2),
                  get_optimizer("nag", 1e-3),
-                 schedule="gather", straggler_mode="random", seed=1)
+                 straggler_source=RandomStragglers(seed=2), seed=1)
     rng = np.random.default_rng(1)
     fixed = make_synthetic_batch(rng, cfg, 16, 0)
     losses = [tr.step(fixed)["loss"] for _ in range(12)]
@@ -162,7 +165,8 @@ def test_multiaxis_data_mesh():
                      axis_types=(AXIS_TYPE_AUTO,) * 3)
     cfg = get_config("qwen3-1.7b").reduced()
     opt = get_optimizer("sgd", 1e-2)
-    arts = make_coded_train_step(cfg, CODE, mesh, opt, schedule="gather")
+    arts = make_coded_train_step(cfg, CODE, mesh, opt,
+                                 spec=coding.SchemeSpec())
     rng = np.random.default_rng(0)
     batch = make_synthetic_batch(rng, cfg, 8, 16)
     placed = CodedBatcher(CODE).place(batch)

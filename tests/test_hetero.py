@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+import repro.coding as coding
 from repro.coding import make_step_inputs, uncovered_subsets
 from repro.configs import get_config
 from repro.core import make_code, make_hetero_code
@@ -183,8 +184,9 @@ def _linear_setup(n_model: int):
 
 def _run_step(code, schedule, stragglers, n_model=1, partial=False):
     cfg, mesh, opt, batch, params = _linear_setup(n_model)
-    arts = make_coded_train_step(cfg, code, mesh, opt, schedule=schedule,
-                                 partial=partial)
+    arts = make_coded_train_step(
+        cfg, code, mesh, opt,
+        spec=coding.SchemeSpec(schedule=schedule, partial=partial))
     placed = jax.tree.map(jnp.asarray, CodedBatcher(code).place(batch))
     fn = arts.compiled(placed)
     inp = arts.step_inputs(stragglers)
@@ -244,7 +246,8 @@ def test_partial_step_completes_past_s_and_reports_bound():
 def test_partial_false_step_raises_past_s():
     code = make_code(N, 4, 2, 2)
     cfg, mesh, opt, batch, _ = _linear_setup(1)
-    arts = make_coded_train_step(cfg, code, mesh, opt, schedule="gather")
+    arts = make_coded_train_step(cfg, code, mesh, opt,
+                                 spec=coding.SchemeSpec())
     with pytest.raises(ValueError):
         arts.step_inputs((0, 1, 3))
 

@@ -13,6 +13,7 @@ import jax
 import numpy as np
 import pytest
 
+import repro.coding as coding
 from repro.configs import get_config
 from repro.core import make_code
 from repro.data import CodedBatcher, make_synthetic_batch
@@ -33,8 +34,9 @@ def _collective_counts(schedule: str, packed: bool):
     cfg = get_config(ARCH).reduced()
     mesh = make_local_mesh(N, 1)
     opt = get_optimizer("sgd", 1e-2)
-    arts = make_coded_train_step(cfg, CODE, mesh, opt, schedule=schedule,
-                                 packed=packed)
+    arts = make_coded_train_step(
+        cfg, CODE, mesh, opt,
+        spec=coding.SchemeSpec(schedule=schedule, packed=packed))
     rng = np.random.default_rng(0)
     placed = CodedBatcher(CODE).place(make_synthetic_batch(rng, cfg, 8, 16))
     txt = arts.lowered(placed, cfg, opt).compile().as_text()

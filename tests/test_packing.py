@@ -234,8 +234,10 @@ def _step_params(schedule: str, wire: str, packed: bool, ms: int = 1):
     cfg = dataclasses.replace(get_config("logistic-paper"), d_model=64)
     mesh = make_local_mesh(N, ms)
     opt = get_optimizer("sgd", 1e-2)
-    arts = make_coded_train_step(cfg, CODE, mesh, opt, schedule=schedule,
-                                 encode_dtype=wire, packed=packed)
+    arts = make_coded_train_step(
+        cfg, CODE, mesh, opt,
+        spec=coding.SchemeSpec(schedule=schedule, encode_dtype=wire,
+                               packed=packed))
     rng = np.random.default_rng(5)
     placed = jax.tree.map(jnp.asarray, CodedBatcher(CODE).place(
         make_synthetic_batch(rng, cfg, 16, 0)))

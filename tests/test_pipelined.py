@@ -21,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+import repro.coding as coding
 from repro.configs import get_config
 from repro.core import make_code
 from repro.data import CodedBatcher, make_synthetic_batch
@@ -58,9 +59,8 @@ def _tree_max_diff(a, b):
 def _build(schedule, backend, opt, ms=1, **kw):
     cfg = _cfg()
     mesh = make_local_mesh(N, ms)
-    return cfg, make_coded_train_step(cfg, CODE, mesh, opt,
-                                      schedule=schedule, backend=backend,
-                                      **kw)
+    spec = coding.SchemeSpec(schedule=schedule, backend=backend, **kw)
+    return cfg, make_coded_train_step(cfg, CODE, mesh, opt, spec=spec)
 
 
 # -------------------------------------------------------- fill/drain parity
@@ -199,19 +199,24 @@ def test_pipelined_builder_validation():
     mesh = make_local_mesh(N, 1)
     sgd = get_optimizer("sgd", 1e-2)
     with pytest.raises(ValueError, match="encoding"):
-        make_coded_train_step(cfg, CODE, mesh, sgd, schedule="psum",
-                              pipelined=True)
+        make_coded_train_step(cfg, CODE, mesh, sgd,
+                              spec=coding.SchemeSpec(schedule="psum",
+                                                     pipelined=True))
     with pytest.raises(ValueError, match="packed"):
-        make_coded_train_step(cfg, CODE, mesh, sgd, packed=False,
-                              pipelined=True)
+        make_coded_train_step(cfg, CODE, mesh, sgd,
+                              spec=coding.SchemeSpec(packed=False,
+                                                     pipelined=True))
     with pytest.raises(ValueError, match="partial"):
-        make_coded_train_step(cfg, CODE, mesh, sgd, partial=True,
-                              pipelined=True)
+        make_coded_train_step(cfg, CODE, mesh, sgd,
+                              spec=coding.SchemeSpec(partial=True,
+                                                     pipelined=True))
     with pytest.raises(ValueError, match="pipelined"):
-        make_coded_train_step(cfg, CODE, mesh, sgd, fuse_apply=True)
+        make_coded_train_step(cfg, CODE, mesh, sgd,
+                              spec=coding.SchemeSpec(fuse_apply=True))
     with pytest.raises(ValueError, match="sgd"):
-        make_coded_train_step(cfg, CODE, mesh, get_optimizer("nag", 1e-3),
-                              pipelined=True, fuse_apply=True)
+        make_coded_train_step(
+            cfg, CODE, mesh, get_optimizer("nag", 1e-3),
+            spec=coding.SchemeSpec(pipelined=True, fuse_apply=True))
 
 
 def test_pipelining_supported_predicate():
@@ -237,8 +242,8 @@ def test_trainer_pipelined_staleness_bound():
 
     def run(pipelined):
         tr = Trainer(cfg, CODE, make_local_mesh(N, 1),
-                     get_optimizer("sgd", 0.1), schedule="gather",
-                     pipelined=pipelined, straggler_mode="none", seed=0)
+                     get_optimizer("sgd", 0.1),
+                     spec=coding.SchemeSpec(pipelined=pipelined), seed=0)
         losses = [tr.step(fixed)["loss"] for _ in range(steps)]
         if pipelined:
             assert tr._driver is not None and tr._driver.in_flight
@@ -268,8 +273,8 @@ def test_trainer_swap_drains_in_flight_pipeline():
     rng = np.random.default_rng(13)
     fixed = make_synthetic_batch(rng, cfg, 16, 0)
     tr = Trainer(cfg, CODE, make_local_mesh(N, 1),
-                 get_optimizer("sgd", 0.1), schedule="gather",
-                 pipelined=True, straggler_mode="none", seed=0)
+                 get_optimizer("sgd", 0.1),
+                 spec=coding.SchemeSpec(pipelined=True), seed=0)
     for _ in range(3):
         tr.step(fixed)
     assert tr._driver is not None and tr._driver.in_flight

@@ -1,0 +1,199 @@
+"""SchemeSpec: the one value object for every scheme lever.
+
+Pins the API-redesign contracts: the spec path and the deprecated kwarg
+path build bitwise-identical steps; spec= and kwargs cannot be mixed; the
+spec's validation reproduces the historical error messages; and the
+Trainer's legacy straggler fields map onto the StragglerSource protocol
+with deprecation warnings.
+"""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.coding as coding
+from repro.configs import get_config
+from repro.core import make_code
+from repro.data import CodedBatcher, make_synthetic_batch
+from repro.launch.mesh import make_local_mesh
+from repro.models import api as model_api
+from repro.optim import get_optimizer
+from repro.train.coded_step import make_coded_train_step
+from repro.train.trainer import Trainer
+from repro.tune import (FixedStragglers, NoStragglers, RandomStragglers,
+                        StragglerSource, TimedSource, as_straggler_source)
+
+CODE = make_code(4, 3, 1, 2)
+
+
+def _linear_cfg():
+    return dataclasses.replace(get_config("logistic-paper"), d_model=64)
+
+
+# ----------------------------------------------------------- the value object
+def test_spec_is_frozen_and_replace_works():
+    spec = coding.SchemeSpec(schedule="a2a", packed=False)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        spec.schedule = "gather"
+    spec2 = spec.replace(packed=True)
+    assert spec2.schedule == "a2a" and spec2.packed and not spec.packed
+
+
+def test_spec_validation_reproduces_historical_messages():
+    with pytest.raises(ValueError, match="packed"):
+        coding.SchemeSpec(pipelined=True, packed=False)
+    with pytest.raises(ValueError, match="partial"):
+        coding.SchemeSpec(pipelined=True, partial=True)
+    with pytest.raises(ValueError, match="encoding"):
+        coding.SchemeSpec(pipelined=True, schedule="psum")
+    with pytest.raises(ValueError, match="pipelined"):
+        coding.SchemeSpec(fuse_apply=True)
+
+
+def test_spec_and_kwargs_cannot_mix():
+    cfg = _linear_cfg()
+    mesh = make_local_mesh(4, 1)
+    opt = get_optimizer("sgd", 1e-2)
+    with pytest.raises(TypeError, match="not both"):
+        make_coded_train_step(cfg, CODE, mesh, opt,
+                              spec=coding.SchemeSpec(), schedule="a2a")
+
+
+def _run_one_step(arts):
+    cfg = _linear_cfg()
+    rng = np.random.default_rng(5)
+    batch = make_synthetic_batch(rng, cfg, 16, 0)
+    placed = jax.tree.map(jnp.asarray, CodedBatcher(CODE).place(batch))
+    fn = arts.compiled(placed)
+    params = model_api.init(jax.random.PRNGKey(7), cfg)
+    opt = get_optimizer("sgd", 1e-2)
+    inp = arts.step_inputs([2])
+    return fn(params, opt.init(params), placed, inp["W"], inp["mask"],
+              inp["rho"])
+
+
+def test_legacy_kwargs_build_bitwise_identical_step():
+    """Acceptance criterion: the deprecation-shim path and the spec path
+    produce bitwise-identical StepArtifacts outputs."""
+    cfg = _linear_cfg()
+    mesh = make_local_mesh(4, 1)
+    opt = get_optimizer("sgd", 1e-2)
+    spec = coding.SchemeSpec(schedule="a2a", backend="ref", packed=False,
+                             encode_dtype="bfloat16")
+    via_spec = make_coded_train_step(cfg, CODE, mesh, opt, spec=spec)
+    with pytest.warns(DeprecationWarning, match="scheme kwargs"):
+        via_kwargs = make_coded_train_step(
+            cfg, CODE, mesh, opt, schedule="a2a", backend="ref",
+            packed=False, encode_dtype="bfloat16")
+    assert via_kwargs.spec == spec
+    p_a, o_a, m_a = _run_one_step(via_spec)
+    p_b, o_b, m_b = _run_one_step(via_kwargs)
+    for xa, xb in zip(jax.tree.leaves((p_a, o_a, m_a)),
+                      jax.tree.leaves((p_b, o_b, m_b))):
+        np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb))
+
+
+def test_spec_threads_through_step_artifacts():
+    cfg = _linear_cfg()
+    mesh = make_local_mesh(4, 1)
+    opt = get_optimizer("sgd", 1e-2)
+    spec = coding.SchemeSpec(schedule="gather", backend="ref")
+    arts = make_coded_train_step(cfg, CODE, mesh, opt, spec=spec)
+    assert arts.spec is spec
+    assert arts.codec.backend.name == "ref"
+
+
+# -------------------------------------------------------- straggler sources
+def test_as_straggler_source_dispatch():
+    assert isinstance(as_straggler_source(None), NoStragglers)
+    src = FixedStragglers((1, 2))
+    assert as_straggler_source(src) is src
+    assert isinstance(src, StragglerSource)
+    timed = as_straggler_source(lambda step, code: None)
+    assert isinstance(timed, TimedSource) and timed.provides_times
+    with pytest.raises(TypeError):
+        as_straggler_source(42)
+
+
+def test_fixed_and_random_sources_draw_within_design():
+    fixed = FixedStragglers((2,))
+    d = fixed.draw(0, CODE)
+    assert d.stragglers == (2,) and d.times is None
+    rnd = RandomStragglers(seed=1)
+    seen = set()
+    for t in range(32):
+        st = rnd.draw(t, CODE).stragglers
+        assert len(st) <= CODE.s
+        seen.add(st)
+    assert len(seen) > 1               # actually random
+    # deterministic across instances with one seed
+    a = [RandomStragglers(seed=9).draw(t, CODE).stragglers
+         for t in range(8)]
+    b = [RandomStragglers(seed=9).draw(t, CODE).stragglers
+         for t in range(8)]
+    assert a == b
+
+
+def test_trainer_legacy_straggler_fields_warn_and_map():
+    cfg = _linear_cfg()
+    mesh = make_local_mesh(4, 1)
+    opt = get_optimizer("sgd", 1e-2)
+    with pytest.warns(DeprecationWarning, match="straggler_source"):
+        tr = Trainer(cfg=cfg, code=CODE, mesh=mesh, optimizer=opt,
+                     straggler_mode="fixed", fixed_stragglers=(1,))
+    assert isinstance(tr._source, FixedStragglers)
+    assert tr._source.draw(0, CODE).stragglers == (1,)
+    with pytest.warns(DeprecationWarning, match="straggler_source"):
+        tr = Trainer(cfg=cfg, code=CODE, mesh=mesh, optimizer=opt,
+                     straggler_mode="random", seed=3)
+    assert isinstance(tr._source, RandomStragglers)
+    tr = Trainer(cfg=cfg, code=CODE, mesh=mesh, optimizer=opt)
+    assert isinstance(tr._source, NoStragglers)
+
+
+def test_trainer_rejects_source_plus_legacy_fields():
+    cfg = _linear_cfg()
+    mesh = make_local_mesh(4, 1)
+    opt = get_optimizer("sgd", 1e-2)
+    with pytest.raises(ValueError, match="straggler_source"):
+        Trainer(cfg=cfg, code=CODE, mesh=mesh, optimizer=opt,
+                straggler_source=NoStragglers(), straggler_mode="random")
+    with pytest.raises(ValueError, match="straggler"):
+        Trainer(cfg=cfg, code=CODE, mesh=mesh, optimizer=opt,
+                straggler_mode="nope")
+
+
+def test_trainer_spec_kwarg_and_legacy_kwargs():
+    cfg = _linear_cfg()
+    mesh = make_local_mesh(4, 1)
+    opt = get_optimizer("sgd", 1e-2)
+    spec = coding.SchemeSpec(schedule="a2a", backend="ref")
+    tr = Trainer(cfg=cfg, code=CODE, mesh=mesh, optimizer=opt, spec=spec)
+    assert tr.spec == spec and tr.schedule == "a2a"
+    with pytest.warns(DeprecationWarning, match="scheme kwargs"):
+        tr2 = Trainer(cfg=cfg, code=CODE, mesh=mesh, optimizer=opt,
+                      schedule="a2a", backend="ref")
+    assert tr2.spec == spec
+    with pytest.raises(TypeError, match="not both"):
+        Trainer(cfg=cfg, code=CODE, mesh=mesh, optimizer=opt, spec=spec,
+                schedule="gather")
+
+
+def test_trainer_runs_one_step_from_spec():
+    """The spec-built Trainer trains: one real step on the host mesh with
+    a warning-free construction."""
+    cfg = _linear_cfg()
+    mesh = make_local_mesh(4, 1)
+    opt = get_optimizer("sgd", 1e-2)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        tr = Trainer(cfg=cfg, code=CODE, mesh=mesh, optimizer=opt,
+                     spec=coding.SchemeSpec(schedule="gather"),
+                     straggler_source=FixedStragglers((2,)))
+    rng = np.random.default_rng(5)
+    batch = make_synthetic_batch(rng, cfg, 16, 0)
+    metrics = tr.step(batch)
+    assert np.isfinite(float(np.asarray(metrics["loss"]).reshape(-1)[0]))

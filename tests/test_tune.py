@@ -17,6 +17,7 @@ import pytest
 
 from repro.core.runtime_model import (RuntimeParams, expected_total_runtime,
                                       optimal_triple)
+import repro.coding as coding
 from repro.tune import (AutotunePolicy, Autotuner, DriftingSampler,
                         FitResult, Plan, ShiftedExpSampler, StepRecord,
                         TelemetryLog, WorkerTimes, crosscheck_waits,
@@ -409,8 +410,8 @@ def test_trainer_autotune_swaps_codec_and_reuses_cache():
     policy = AutotunePolicy(interval=3, window=6, min_samples=3,
                             schedules=("gather",), npts=4_000)
     tr = Trainer(cfg, make_code(4, 4, 2, 2), make_local_mesh(4, 1),
-                 optimizer=get_optimizer("sgd", 1e-2), schedule="gather",
-                 injector=drift, autotune=policy)
+                 optimizer=get_optimizer("sgd", 1e-2),
+                 straggler_source=drift, autotune=policy)
     rng = np.random.default_rng(0)
     for i in range(16):
         m = tr.step(make_synthetic_batch(rng, cfg, 16, 0))
@@ -505,8 +506,9 @@ def test_trainer_autotune_partial_interop():
     policy = AutotunePolicy(interval=3, window=6, min_samples=3,
                             schedules=("gather",), npts=4_000)
     tr = Trainer(cfg, make_code(4, 4, 2, 2), make_local_mesh(4, 1),
-                 optimizer=get_optimizer("sgd", 1e-2), schedule="gather",
-                 partial=True, injector=drift, autotune=policy)
+                 optimizer=get_optimizer("sgd", 1e-2),
+                 spec=coding.SchemeSpec(partial=True),
+                 straggler_source=drift, autotune=policy)
     rng = np.random.default_rng(1)
     for i in range(10):
         m = tr.step(make_synthetic_batch(rng, cfg, 16, 0))
