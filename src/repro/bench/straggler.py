@@ -88,6 +88,7 @@ def draw_patterns_hetero(
     speeds: np.ndarray | list[float] | None = None,
     seed: int = 0,
     n_drop: int | None = None,
+    departed: list[int] | tuple[int, ...] = (),
 ) -> list[StragglerPattern]:
     """Heterogeneous-cluster generalisation of `draw_patterns`.
 
@@ -105,6 +106,12 @@ def draw_patterns_hetero(
     `loads[i] / speeds[i]`, which keeps the straggler budget `s` available
     for genuine noise instead of burning it on deterministically slow
     workers.
+
+    `departed` names workers that never respond (elastic membership churn):
+    their modeled finish time is `+inf`, so they are always among the
+    dropped.  Note a *zero-load* departed worker would otherwise look like
+    the fastest responder (zero compute), silently corrupting the wait —
+    this is why the elastic planner must pass the departed set explicitly.
     """
     rng = np.random.default_rng(seed)
     n = params.n
@@ -116,7 +123,13 @@ def draw_patterns_hetero(
         params.t1 + rng.exponential(1.0 / params.lambda1, (iters, n))
     )
     comm = (params.t2 + rng.exponential(1.0 / params.lambda2, (iters, n))) / m
-    return _patterns_from_times(comp + comm, n, s if n_drop is None else n_drop)
+    total = comp + comm
+    if departed:
+        dep = sorted({int(i) for i in departed})
+        if any(i < 0 or i >= n for i in dep):
+            raise ValueError(f"departed indices {dep} out of range 0..{n-1}")
+        total[:, dep] = np.inf
+    return _patterns_from_times(total, n, s if n_drop is None else n_drop)
 
 
 def draw_patterns_overlapped(

@@ -4,11 +4,17 @@ Design (deliberately dependency-free — numpy only):
 - a pytree is flattened with ``jax.tree_util.tree_flatten_with_path``; each
   leaf is stored under its path string, so restores are structure-checked
   and survive refactors that keep leaf paths stable;
-- writes are atomic (tmp file + rename) so a preempted host never leaves a
-  torn checkpoint;
+- writes are atomic (tmp file + fsync + rename + directory fsync) so a
+  preempted or power-cut host never leaves a torn checkpoint *visible
+  under the final name* — and even if a crash mid-rename does (some
+  filesystems reorder the data and rename without the fsyncs),
+  ``CheckpointManager.restore_latest`` walks backwards past unreadable
+  snapshots to the newest intact one;
 - ``CheckpointManager`` keeps the newest ``keep`` steps and restores the
   latest on resume — the trainer wiring point for straggler/preemption
-  recovery beyond the per-step coding guarantees.
+  recovery beyond the per-step coding guarantees.  Retention pruning runs
+  only *after* the new snapshot has been written back-readable, so a
+  failed save never costs an old good checkpoint.
 
 Sharded arrays are gathered to host before saving (fine at the CPU test
 scale; a production TPU deployment would swap in per-shard writes behind
@@ -21,6 +27,9 @@ import os
 import pathlib
 import re
 import tempfile
+import warnings
+import zipfile
+import zlib
 from typing import Any
 
 import jax
@@ -29,6 +38,14 @@ import numpy as np
 PyTree = Any
 
 _SEP = "//"
+
+#: Exceptions a torn/corrupt npz raises on open or decompress — the set
+#: ``CheckpointManager.restore_latest`` treats as "fall back one step".
+#: A *shape mismatch* (ValueError from :func:`restore_tree`) is NOT here:
+#: that is a caller bug (restoring into the wrong structure), not
+#: corruption, and must surface loudly.
+TORN_CHECKPOINT_ERRORS = (zipfile.BadZipFile, EOFError, OSError,
+                          zlib.error, KeyError)
 
 
 def _path_str(path) -> str:
@@ -45,9 +62,36 @@ def _path_str(path) -> str:
     return _SEP.join(parts)
 
 
+def _fsync_dir(directory: pathlib.Path) -> None:
+    """fsync a directory so a just-renamed entry survives power loss.
+
+    Best-effort: some filesystems (and all of Windows) refuse O_RDONLY
+    fsync on directories — the rename is still atomic there, only the
+    durability-after-power-cut guarantee degrades.
+    """
+    try:
+        fd = os.open(directory, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
 def save_tree(path: str | pathlib.Path, tree: PyTree,
               metadata: dict | None = None) -> None:
-    """Atomically write a pytree of arrays (+ JSON metadata) to ``path``."""
+    """Atomically + durably write a pytree of arrays (+ JSON metadata).
+
+    The write sequence is tmp file -> flush -> ``fsync(file)`` ->
+    ``os.replace`` -> ``fsync(parent dir)``: without the first fsync the
+    rename can land before the data blocks (a power cut then leaves a
+    *named* torn file — the worst case, because the name promises a valid
+    snapshot); without the second the rename itself may vanish on power
+    loss (benign: the old state simply persists).
+    """
     path = pathlib.Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
@@ -59,7 +103,10 @@ def save_tree(path: str | pathlib.Path, tree: PyTree,
     try:
         with os.fdopen(fd, "wb") as f:
             np.savez(f, **arrays)
+            f.flush()
+            os.fsync(f.fileno())
         os.replace(tmp, path)
+        _fsync_dir(path.parent)
     except BaseException:
         if os.path.exists(tmp):
             os.unlink(tmp)
@@ -88,13 +135,20 @@ def restore_tree(path: str | pathlib.Path, like: PyTree
 
 
 class CheckpointManager:
-    """step-numbered checkpoints with retention."""
+    """Step-numbered checkpoints with retention and torn-file fallback."""
 
     _RE = re.compile(r"ckpt_(\d+)\.npz$")
 
     def __init__(self, directory: str | pathlib.Path, keep: int = 3):
+        """``keep`` newest snapshots are retained; must be >= 1 (``keep=0``
+        would silently delete every checkpoint it just wrote — the classic
+        ``list[:-0] == list`` footgun)."""
+        if int(keep) < 1:
+            raise ValueError(
+                f"keep must be >= 1, got {keep}: retention would delete "
+                f"every checkpoint immediately after writing it")
         self.dir = pathlib.Path(directory)
-        self.keep = keep
+        self.keep = int(keep)
         self.dir.mkdir(parents=True, exist_ok=True)
 
     def _step_path(self, step: int) -> pathlib.Path:
@@ -109,9 +163,19 @@ class CheckpointManager:
         return sorted(out)
 
     def save(self, step: int, tree: PyTree, metadata: dict | None = None) -> None:
+        """Write the step snapshot, verify it reads back, then prune.
+
+        The verification open (a cheap zip-directory read, no array
+        decompression) and the prune ordering together guarantee the
+        newest *retained* checkpoints are readable: a save that fails to
+        land never deletes the older snapshots a resume would need.
+        """
         md = dict(metadata or {})
         md["step"] = step
-        save_tree(self._step_path(step), tree, md)
+        path = self._step_path(step)
+        save_tree(path, tree, md)
+        with np.load(path) as data:   # verify before pruning old steps
+            data.files
         for s in self.steps()[:-self.keep]:
             self._step_path(s).unlink(missing_ok=True)
 
@@ -120,7 +184,32 @@ class CheckpointManager:
         return s[-1] if s else None
 
     def restore_latest(self, like: PyTree) -> tuple[PyTree, dict] | None:
-        s = self.latest_step()
-        if s is None:
-            return None
-        return restore_tree(self._step_path(s), like)
+        """Restore the newest *readable* checkpoint (or ``None`` if none).
+
+        Snapshots are tried newest-first; one that fails to open or
+        decompress (:data:`TORN_CHECKPOINT_ERRORS` — a torn write from a
+        crash mid-save, a truncated copy) is skipped with a warning and
+        the next-older step is tried.  A *shape mismatch* still raises:
+        that means the caller's ``like`` structure is wrong, and silently
+        resuming an older compatible snapshot would mask the bug.
+        """
+        last_err: Exception | None = None
+        for s in reversed(self.steps()):
+            try:
+                return restore_tree(self._step_path(s), like)
+            except TORN_CHECKPOINT_ERRORS + (ValueError,) as e:
+                # np.load raises ValueError for unrecognisable (garbage)
+                # content — torn; restore_tree raises it for a shape
+                # mismatch — a caller bug that must not be skipped.
+                if (isinstance(e, ValueError)
+                        and str(e).startswith("shape mismatch")):
+                    raise
+                warnings.warn(
+                    f"checkpoint step {s} unreadable "
+                    f"({type(e).__name__}: {e}); falling back to the "
+                    f"previous step", stacklevel=2)
+                last_err = e
+        if last_err is not None:
+            warnings.warn("no readable checkpoint found; starting fresh",
+                          stacklevel=2)
+        return None

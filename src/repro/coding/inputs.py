@@ -42,8 +42,18 @@ def make_step_inputs(code: GradCode, stragglers: Sequence[int] | np.ndarray = ()
              ``sqrt(sum_j ||g_j||^2)`` for the L2 decode-error bound
     """
     n, d = code.n, code.d
+    idx = np.asarray(list(stragglers), dtype=int)
+    if idx.size and (idx.min() < 0 or idx.max() >= n):
+        # an out-of-range index would otherwise IndexError deep in the
+        # mask scatter (or worse, a negative index would silently wrap) —
+        # the elastic path can produce these from a stale draw after a
+        # resize, and must get a diagnosable error if it forgets restrict()
+        raise ValueError(
+            f"straggler indices {sorted(int(i) for i in idx)} out of range "
+            f"for n={n} workers; restrict the draw to the active code "
+            f"(StragglerDraw.restrict) after a cluster resize")
     st = np.zeros(n, dtype=bool)
-    st[np.asarray(list(stragglers), dtype=int)] = True
+    st[idx] = True
     if not partial and st.sum() > code.s:
         raise ValueError(
             f"more stragglers ({st.sum()}) than design s={code.s}; pass "

@@ -159,15 +159,30 @@ class HeteroPlan:
                 f"stragglers")
 
 
-def plan_loads(speeds: Sequence[float], k: int, r: int) -> tuple[int, ...]:
+def plan_loads(speeds: Sequence[float], k: int, r: int,
+               departed: Sequence[int] = ()) -> tuple[int, ...]:
     """Integer per-worker loads proportional to ``speeds``.
 
     Largest-remainder rounding of ``k * r * speeds / sum(speeds)`` with the
     per-worker cap ``load <= k`` enforced by redistributing the excess to the
     fastest uncapped workers.  The result always sums to ``k * r``.
+
+    ``departed`` pins the named workers to exactly zero load (the elastic
+    degradation rung: a departed worker becomes a pure straggler holding no
+    data); the full ``k * r`` replication is carried by the remaining
+    workers, so feasibility requires ``r`` alive workers.
     """
     mu = np.asarray(speeds, dtype=np.float64)
     n = len(mu)
+    departed = sorted({int(i) for i in departed})
+    if any(i < 0 or i >= n for i in departed):
+        raise ValueError(f"departed indices {departed} out of range 0..{n-1}")
+    if departed:
+        alive = [i for i in range(n) if i not in departed]
+        sub = plan_loads(mu[alive], k, r)
+        out = np.zeros(n, dtype=int)
+        out[alive] = sub
+        return tuple(int(x) for x in out)
     if np.any(mu <= 0):
         raise ValueError(f"speeds must be positive, got {list(speeds)}")
     if not (0 < r <= n):
@@ -228,17 +243,29 @@ def balanced_assignment(loads: Sequence[int], k: int, r: int) -> np.ndarray:
 
 
 def plan_hetero(speeds: Sequence[float], s: int, m: int,
-                k: int | None = None) -> HeteroPlan:
+                k: int | None = None,
+                departed: Sequence[int] = ()) -> HeteroPlan:
     """Build a :class:`HeteroPlan` from a per-worker speed vector.
 
     ``k`` defaults to ``2 * n`` — twice as many subsets as workers gives the
     load assignment half-worker granularity without exploding the batch
     divisibility requirement (the global batch must be divisible by ``k``).
+
+    ``departed`` assigns the named workers zero load at unchanged ``n``
+    (elastic degradation rung 2: the departed worker stays in the code's
+    index space as a pure straggler, so the mesh, wire format and decode
+    shapes are untouched).  Exact decode then additionally requires the
+    straggler budget to cover the departures (``s >= len(departed)``),
+    since a departed worker never responds.
     """
     n = len(speeds)
     k = 2 * n if k is None else k
     r = s + m
-    loads = plan_loads(speeds, k, r)
+    if departed and s < len(set(int(i) for i in departed)):
+        raise ValueError(
+            f"straggler budget s={s} cannot cover {len(set(departed))} "
+            f"departed (never-responding) workers; raise s or resize")
+    loads = plan_loads(speeds, k, r, departed=departed)
     return HeteroPlan(n=n, s=s, m=m, k=k,
                       speeds=tuple(float(x) for x in speeds), loads=loads)
 
@@ -443,11 +470,14 @@ class HeteroCode:
 
 def make_hetero_code(speeds: Sequence[float], s: int, m: int, *,
                      k: int | None = None, kind: str | None = None,
-                     seed: int = 0) -> HeteroCode:
+                     seed: int = 0,
+                     departed: Sequence[int] = ()) -> HeteroCode:
     """Factory: speed vector -> :class:`HeteroCode`.
 
     Mirrors :func:`repro.core.schemes.make_code`'s stability default:
     Vandermonde ("poly") V up to n = 20 workers, Gaussian beyond.
+    ``departed`` workers get zero load at unchanged ``n`` (elastic rung 2,
+    see :func:`plan_hetero`).
 
     >>> code = make_hetero_code([0.5, 1.0, 1.0, 1.5], s=1, m=2)
     >>> code.loads                      # fast workers hold more subsets
@@ -458,5 +488,5 @@ def make_hetero_code(speeds: Sequence[float], s: int, m: int, *,
     n = len(speeds)
     if kind is None:
         kind = "poly" if n <= 20 else "random"
-    return HeteroCode(plan=plan_hetero(speeds, s, m, k=k), kind=kind,
-                      seed=seed)
+    return HeteroCode(plan=plan_hetero(speeds, s, m, k=k, departed=departed),
+                      kind=kind, seed=seed)

@@ -1,0 +1,43 @@
+"""Elastic cluster membership: survive worker churn while training.
+
+The package closes the gap between the paper's *straggler* model (slow
+workers that still exist) and production *churn* (workers that leave —
+spot reclaims, maintenance, failures — and later rejoin or are replaced):
+
+- :mod:`repro.elastic.events` — how membership changes enter a run: the
+  :class:`ChurnSource` protocol, scripted :class:`MembershipTrace`
+  replays, and the :class:`PoissonChurn` spot-fleet sampler;
+- :mod:`repro.elastic.tracker` — the :class:`MembershipTracker` state
+  machine (active -> suspected -> departed, with heartbeat-miss
+  escalation and backoff) and the :class:`MembershipSource` adapter that
+  feeds departures into every straggler draw;
+- :mod:`repro.elastic.trainer` — :class:`ElasticTrainer` +
+  :class:`ElasticPolicy`: the three-rung degradation ladder (forced
+  straggler / partial failover -> zero-load exact re-plan -> resize with
+  warm caches) and deterministic recovery.
+
+See ``docs/elasticity.md`` for the guide and
+``benchmarks/bench_elastic.py`` for the gated churn-trace replay.
+"""
+from .events import (EVENT_KINDS, ChurnSource, MembershipEvent,
+                     MembershipTrace, NoChurn, PoissonChurn, as_churn_source)
+from .tracker import (ACTIVE, DEPARTED, SUSPECTED, MembershipSource,
+                      MembershipTracker)
+from .trainer import ElasticPolicy, ElasticTrainer
+
+__all__ = [
+    "EVENT_KINDS",
+    "ChurnSource",
+    "MembershipEvent",
+    "MembershipTrace",
+    "NoChurn",
+    "PoissonChurn",
+    "as_churn_source",
+    "ACTIVE",
+    "SUSPECTED",
+    "DEPARTED",
+    "MembershipSource",
+    "MembershipTracker",
+    "ElasticPolicy",
+    "ElasticTrainer",
+]

@@ -46,7 +46,7 @@ import numpy as np
 
 from repro.coding import SchemeSpec, make_step_inputs, resolve_scheme_spec
 from repro.compat import set_mesh
-from repro.core import GradCode, make_code, make_hetero_code
+from repro.core import GradCode, make_code
 from repro.data import CodedBatcher
 from repro.optim import Optimizer
 
@@ -160,6 +160,7 @@ class Trainer:
             self.opt_state = self.optimizer.init(self.params)
         self._jitted = {}
         self._step_count = 0
+        self._data_cursor = 0   # batches consumed (for trajectory resume)
         self._tuner = None
         self.telemetry = None
         if self.autotune is not None:
@@ -182,6 +183,25 @@ class Trainer:
                     self.params = jax.tree.map(jnp.asarray, state["params"])
                     self.opt_state = jax.tree.map(jnp.asarray, state["opt_state"])
                 self._step_count = int(meta.get("step", 0))
+                # trajectory-exact resume state: where the data stream was
+                # (skip_to_cursor replays a fresh stream to this point) and
+                # which seed/scheme produced the snapshot — a mismatch means
+                # the resumed run would silently diverge, so warn loudly.
+                self._data_cursor = int(
+                    meta.get("data_cursor", self._step_count))
+                if "seed" in meta and int(meta["seed"]) != self.seed:
+                    warnings.warn(
+                        f"checkpoint was written with seed "
+                        f"{meta['seed']}, trainer has seed {self.seed}: "
+                        f"the resumed trajectory will not match the "
+                        f"original run", stacklevel=3)
+                if ("scheme_sig" in meta
+                        and meta["scheme_sig"] != repr(self._scheme_sig)):
+                    warnings.warn(
+                        f"checkpoint scheme {meta['scheme_sig']} differs "
+                        f"from the trainer's {self._scheme_sig!r}: resuming "
+                        f"with a different codec changes the straggler/"
+                        f"decode trajectory", stacklevel=3)
 
     # ------------------------------------------------------- codec swapping
     @staticmethod
@@ -192,22 +212,40 @@ class Trainer:
                 scheme_k(code), scheme_loads(code),
                 getattr(code, "kind", ""), getattr(code, "seed", 0))
 
+    def _sig(self, partial: bool | None = None,
+             pipelined: bool | None = None) -> tuple:
+        """Scheme signature with optional per-step overrides.
+
+        ``partial`` joins the signature (and hence the jitted-executable
+        key): the partial step takes an extra ``err_factor`` argument, so
+        an executable compiled for one mode must never serve the other.
+        """
+        return (self._code_key(self.code), self.schedule, self.packed,
+                self.partial if partial is None else bool(partial),
+                self.pipelined if pipelined is None else bool(pipelined))
+
     @property
     def _scheme_sig(self) -> tuple:
-        return (self._code_key(self.code), self.schedule, self.packed,
-                self.pipelined)
+        return self._sig()
 
     def _get_arts(self, code, schedule: str, packed: bool,
-                  pipelined: bool = False):
+                  pipelined: bool = False, partial: bool | None = None):
         """StepArtifacts for a scheme, built once per signature (the compile
-        cache's first layer; the jitted executables are the second)."""
-        key = (self._code_key(code), schedule, packed, self.partial,
-               pipelined)
+        cache's first layer; the jitted executables are the second).
+
+        ``partial`` overrides the trainer's mode for this build — the
+        elastic failover path compiles a partial twin of the active scheme
+        so a past-budget straggler step can decode approximately instead
+        of raising.  Partial artifacts are always synchronous
+        (``SchemeSpec`` rejects pipelined+partial).
+        """
+        part = self.partial if partial is None else bool(partial)
+        key = (self._code_key(code), schedule, packed, part, pipelined)
         if key not in self._arts_cache:
             self._arts_cache[key] = make_coded_train_step(
                 self.cfg, code, self.mesh, self.optimizer,
                 spec=self.spec.replace(schedule=schedule, packed=packed,
-                                       pipelined=pipelined))
+                                       pipelined=pipelined, partial=part))
         return self._arts_cache[key]
 
     def _current_plan(self):
@@ -225,15 +263,24 @@ class Trainer:
 
     def _code_for_plan(self, plan):
         """Materialise the scheme object a ranked plan selects."""
+        n = len(plan.loads)
         if plan.family == "uniform":
-            return make_code(plan.k, plan.d, plan.s, plan.m)
-        # hetero plans re-derive the load assignment from the fitted speed
-        # vector (plan_hetero is deterministic, so the loads match the plan)
-        assert self._tuner is not None and self._tuner.last_fit is not None
-        return make_hetero_code(self._tuner.last_fit.speeds, plan.s, plan.m,
-                                k=plan.k)
+            return make_code(n, plan.d, plan.s, plan.m)
+        # hetero plans carry their exact load assignment (which may encode
+        # elastic zero-load holes at departed workers) — build the code
+        # from those loads directly rather than re-deriving from speeds,
+        # so the materialised scheme always matches what was ranked
+        from repro.core.hetero import HeteroCode, HeteroPlan
+        speeds = ((1.0,) * n if self._tuner is None
+                  or self._tuner.last_fit is None
+                  or len(self._tuner.last_fit.speeds) != n
+                  else tuple(float(x) for x in self._tuner.last_fit.speeds))
+        hp = HeteroPlan(n=n, s=plan.s, m=plan.m, k=plan.k,
+                        speeds=speeds, loads=tuple(plan.loads))
+        return HeteroCode(plan=hp, kind="poly" if n <= 20 else "random")
 
-    def _apply_plan(self, plan) -> None:
+    def _swap_code(self, code, schedule: str, packed: bool,
+                   pipelined: bool) -> None:
         """Swap the active codec in place (code, schedule, wire, batcher).
 
         A pipelined swap first drains the in-flight wire (its buffers were
@@ -244,17 +291,20 @@ class Trainer:
             self.params, self.opt_state, _ = self._driver.drain(
                 self.params, self.opt_state)
         self._driver = None
-        code = self._code_for_plan(plan)
         self.code = code
-        self.schedule = plan.schedule
-        self.packed = plan.packed
-        self.pipelined = getattr(plan, "pipelined", False)
+        self.schedule = schedule
+        self.packed = packed
+        self.pipelined = pipelined
         self.spec = self.spec.replace(schedule=self.schedule,
                                       packed=self.packed,
                                       pipelined=self.pipelined)
-        self.arts = self._get_arts(code, plan.schedule, plan.packed,
-                                   self.pipelined)
+        self.arts = self._get_arts(code, schedule, packed, self.pipelined)
         self.batcher = CodedBatcher(code)
+
+    def _apply_plan(self, plan) -> None:
+        """Adopt a ranked plan: materialise its code and swap it in."""
+        self._swap_code(self._code_for_plan(plan), plan.schedule,
+                        plan.packed, getattr(plan, "pipelined", False))
 
     @property
     def autotune_events(self) -> list[dict]:
@@ -272,43 +322,99 @@ class Trainer:
             return
         if force or (self.checkpoint_every
                      and self._step_count % self.checkpoint_every == 0):
+            # data_cursor/seed/scheme_sig make the resume trajectory-exact:
+            # a fresh run restoring this snapshot can replay its data stream
+            # to the same batch (skip_to_cursor) and verify it runs the same
+            # seed and codec the snapshot was written under
             self._ckpt.save(self._step_count,
                             {"params": self.params, "opt_state": self.opt_state},
-                            {"arch": self.cfg.name})
+                            {"arch": self.cfg.name,
+                             "data_cursor": self._data_cursor,
+                             "seed": self.seed,
+                             "scheme_sig": repr(self._scheme_sig)})
+
+    def skip_to_cursor(self, stream: Iterator, consumed: int = 0) -> Iterator:
+        """Advance a data stream to the restored batch cursor.
+
+        After a checkpoint restore ``self._data_cursor`` batches of the
+        original run are already inside the restored parameters; a resumed
+        run feeding a *fresh* stream must discard exactly that many batches
+        or every post-resume step trains on the wrong data (the trajectory
+        silently forks).  ``consumed`` says how many batches the caller
+        already pulled from this particular stream.  Returns the stream for
+        chaining.
+        """
+        for _ in range(max(0, self._data_cursor - int(consumed))):
+            next(stream)
+        return stream
+
+    # ---------------------------------------------------------------- hooks
+    def _step_partial(self, stragglers) -> bool:
+        """Whether THIS step decodes partially (subclass failover hook).
+
+        The base trainer simply runs its configured mode;
+        :class:`~repro.elastic.ElasticTrainer` overrides this to force
+        ``True`` when the straggler set exceeds the design budget ``s`` —
+        the past-budget step then fails over to the approximate decode
+        (with its ``decode_err_bound`` certificate) instead of raising.
+        """
+        return bool(self.partial)
+
+    def _departed_workers(self) -> tuple[int, ...]:
+        """Departed worker indices for the re-planner (subclass hook)."""
+        return ()
 
     # ---------------------------------------------------------------- steps
     def step(self, batch: dict[str, np.ndarray]) -> dict[str, float]:
         placed = self.batcher.place(batch)
+        draw = self._source.draw(self._step_count,
+                                 self.code).restrict(self.code.n)
+        stragglers = list(draw.stragglers)
+        times = draw.times
+        part = self._step_partial(stragglers)
+        # a forced-partial step cannot ride the pipelined wire (the partial
+        # executable is synchronous by construction), so it drops to the
+        # sync path for this step only; when the trainer is *configured*
+        # partial, pipelining is already off (SchemeSpec rejects the combo)
+        pipelined = self.pipelined and not part
+        if (self.pipelined and not pipelined and self._driver is not None
+                and self._driver.in_flight):
+            # retire the in-flight update before stepping synchronously —
+            # its buffers are valid under the unchanged codec
+            self.params, self.opt_state, _ = self._driver.drain(
+                self.params, self.opt_state)
+            self._driver = None
+        arts = (self.arts if part == self.partial
+                and pipelined == self.pipelined
+                else self._get_arts(self.code, self.schedule, self.packed,
+                                    pipelined=pipelined, partial=part))
         fn = None
         fresh = False
-        if not self.pipelined:
+        if not pipelined:
             shapes = jax.tree.map(
                 lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), placed)
-            keyshape = (self._scheme_sig,
+            keyshape = (self._sig(partial=part, pipelined=pipelined),
                         tuple(sorted((k, v.shape) for k, v in placed.items())))
             fresh = keyshape not in self._jitted
             if fresh:
-                smapped, in_specs, _ = self.arts.step(shapes)
+                smapped, in_specs, _ = arts.step(shapes)
                 self._jitted[keyshape] = jax.jit(smapped,
                                                  donate_argnums=(0, 1))
             fn = self._jitted[keyshape]
-        draw = self._source.draw(self._step_count, self.code)
-        stragglers = list(draw.stragglers)
-        times = draw.times
-        inp = make_step_inputs(self.code, stragglers, partial=self.partial)
+        inp = make_step_inputs(self.code, stragglers, partial=part)
         args = [jnp.asarray(inp["W"]), jnp.asarray(inp["mask"]),
                 jnp.asarray(inp["rho"])]
-        if self.partial:
+        if part:
             args.append(jnp.asarray(inp["err_factor"]))
         t0 = time.perf_counter()
         with set_mesh(self.mesh):
-            if self.pipelined:
+            if pipelined:
                 # the driver fills on first use (metrics None — no update
                 # retired yet) and runs overlapped steady steps after; its
                 # metrics describe the PREVIOUS batch, whose gradient is
                 # the one applied (stale-by-one)
                 if self._driver is None:
-                    self._driver = PipelineDriver(self.arts)
+                    self._driver = PipelineDriver(arts)
                 self.params, self.opt_state, metrics = self._driver.step(
                     self.params, self.opt_state,
                     jax.tree.map(jnp.asarray, placed), *args)
@@ -328,7 +434,9 @@ class Trainer:
             # a fresh executable's first call pays one-time trace+compile:
             # keep it out of the step-cost calibration (measured_step_s <= 0
             # is ignored by StepCostBook) while still recording the worker
-            # timings the estimator fits on; the returned "step_time_s"
+            # timings the estimator fits on — and hand the compile wall to
+            # the record so the planner's recompile-amortization charge is
+            # calibrated from real traces.  The returned "step_time_s"
             # stays the real wall either way.  A pipelined fill call
             # (metrics None) retires no update, so its wall is not a steady
             # step cost either.
@@ -336,17 +444,20 @@ class Trainer:
             rec = record_from_times(self._step_count, self.code,
                                     self.schedule, self.packed, times,
                                     measured_step_s=0.0 if uncal else wall,
-                                    pipelined=self.pipelined)
+                                    pipelined=pipelined,
+                                    compile_s=wall if fresh else 0.0)
             out["step_time_s"] = wall
             out["modeled_wait_s"] = rec.wait_s
             if self._tuner is not None:
                 self._tuner.record(rec)
-                new_plan = self._tuner.maybe_replan(self._step_count)
+                new_plan = self._tuner.maybe_replan(
+                    self._step_count, departed=self._departed_workers())
                 if new_plan is not None:
                     self._apply_plan(new_plan)
             elif self.telemetry is not None:
                 self.telemetry.append(rec)
         self._step_count += 1
+        self._data_cursor += 1
         self.maybe_checkpoint()
         return out
 

@@ -68,21 +68,23 @@ class Plan:
     predicted_step_s: float     # calibrated measured step cost
     predicted_total_s: float    # wait + step: the ranking key
     pipelined: bool = False     # async double-buffered wire (stale-1)
+    resize_to: int | None = None  # elastic: rebuild the cluster at this n
 
     @property
     def scheme_key(self) -> tuple:
         """Hashable identity of the codec this plan selects (sans costs)."""
         return (self.family, self.d, self.s, self.m, self.k, self.loads,
-                self.schedule, self.packed, self.pipelined)
+                self.schedule, self.packed, self.pipelined, self.resize_to)
 
     def describe(self) -> str:
         """One-line human-readable summary."""
         extra = f",loads={list(self.loads)},k={self.k}" \
             if self.family == "hetero" else ""
+        resize = f",resize->{self.resize_to}" if self.resize_to else ""
         return (f"{self.family}(d={self.d},s={self.s},m={self.m}"
                 f"{extra}),{self.schedule},"
                 f"{'packed' if self.packed else 'per-leaf'}"
-                f"{',pipelined' if self.pipelined else ''}: "
+                f"{',pipelined' if self.pipelined else ''}{resize}: "
                 f"E[T]={self.predicted_total_s:.3f}s "
                 f"(wait {self.predicted_wait_s:.3f} "
                 f"+ step {self.predicted_step_s:.4f})")
@@ -104,6 +106,15 @@ class StepCostBook:
        (optimistic for untried schedules, so they can win the ranking and
        get measured next);
     4. 0.0 when no measurements exist at all.
+
+    The book also pools the one-time **compile walls** telemetry reports
+    for fresh executables (``StepRecord.compile_s``):
+    :meth:`amortized_compile` prices the recompile a candidate would
+    trigger, spread over a re-plan horizon — the membership-aware charge
+    that keeps the elastic ladder from flapping between stay-degraded and
+    resize when the remaining run is too short to earn the recompile back.
+    Records predating the field carry ``compile_s = 0.0``, so the default
+    (non-elastic) ranking path is unchanged.
     """
 
     def __init__(self, records: Sequence[StepRecord] = ()):
@@ -111,23 +122,34 @@ class StepCostBook:
         exact: dict[tuple, list[float]] = {}
         per_cfg: dict[tuple[str, bool], list[float]] = {}
         per_load: list[float] = []
+        compiled: set[tuple] = set()
+        compile_walls: list[float] = []
         for r in records:
-            if r.measured_step_s <= 0:
-                continue
             pipe = bool(getattr(r, "pipelined", False))
-            exact.setdefault(
-                (r.d, r.k, tuple(r.loads), r.schedule, r.packed, pipe),
-                []).append(r.measured_step_s)
-            per_cfg.setdefault((r.schedule, r.packed, pipe), []).append(
-                r.measured_step_s / max(r.d, 1))
-            per_load.append(r.measured_step_s / max(r.d, 1))
+            key = (r.d, r.k, tuple(r.loads), r.schedule, r.packed, pipe)
+            if getattr(r, "compile_s", 0.0) > 0:
+                compile_walls.append(float(r.compile_s))
+            if r.measured_step_s > 0:
+                compiled.add(key)
+                exact.setdefault(key, []).append(r.measured_step_s)
+                per_cfg.setdefault((r.schedule, r.packed, pipe), []).append(
+                    r.measured_step_s / max(r.d, 1))
+                per_load.append(r.measured_step_s / max(r.d, 1))
         self._exact = {k: float(np.mean(v)) for k, v in exact.items()}
         self._per_cfg = {k: float(np.mean(v)) for k, v in per_cfg.items()}
         self._global = float(np.mean(per_load)) if per_load else 0.0
+        self._compiled = compiled
+        self._compile_wall = (float(np.mean(compile_walls))
+                              if compile_walls else 0.0)
 
     def __len__(self) -> int:
         """Number of exactly-measured scheme signatures."""
         return len(self._exact)
+
+    @property
+    def compile_wall_s(self) -> float:
+        """Mean observed one-time trace+compile wall (0.0 if never seen)."""
+        return self._compile_wall
 
     def cost(self, d: int, k: int, loads: tuple[int, ...], schedule: str,
              packed: bool, pipelined: bool = False) -> float:
@@ -138,6 +160,23 @@ class StepCostBook:
         cfg = self._per_cfg.get((schedule, packed, bool(pipelined)))
         return (cfg if cfg is not None else self._global) * max(d, 1)
 
+    def amortized_compile(self, d: int, k: int, loads: tuple[int, ...],
+                          schedule: str, packed: bool,
+                          pipelined: bool = False,
+                          horizon: int = 200) -> float:
+        """Per-step recompile charge for switching to a candidate scheme.
+
+        A scheme already measured is warm in the Trainer's executable
+        cache — switching back is free.  An unseen scheme pays the pooled
+        mean compile wall spread over ``horizon`` steps (the expected
+        steps until the next re-plan).  With no compile observations the
+        charge is 0.0 — the ranking degrades gracefully to cost-blind.
+        """
+        key = (d, k, tuple(loads), schedule, packed, bool(pipelined))
+        if key in self._compiled or self._compile_wall <= 0:
+            return 0.0
+        return self._compile_wall / max(int(horizon), 1)
+
 
 def step_cost_book(records: Sequence[StepRecord]) -> StepCostBook:
     """Build the :class:`StepCostBook` calibration from a telemetry window."""
@@ -145,18 +184,40 @@ def step_cost_book(records: Sequence[StepRecord]) -> StepCostBook:
 
 
 def _hetero_wait(fit: FitResult, loads, k: int, s: int, m: int,
-                 mc_iters: int, seed: int) -> float:
+                 mc_iters: int, seed: int,
+                 departed: Sequence[int] = ()) -> float:
     """Monte-Carlo mean wait of a hetero plan under the fitted model,
-    including the per-worker shift constants (comparable to E[T_tot])."""
-    pats = draw_patterns_hetero(fit.params, loads, k, s, m, mc_iters,
-                                speeds=fit.speeds, seed=seed)
+    including the per-worker shift constants (comparable to E[T_tot]).
+
+    ``departed`` workers never respond (modeled time ``+inf``); the wait
+    is finite only while the drop budget ``s`` covers them.  When the
+    plan's worker count differs from the fit's (a resize candidate), the
+    fitted model is re-shaped positionally: retained workers keep their
+    fitted speeds, brand-new workers get speed 1, and the vector is
+    re-normalised to mean 1.
+    """
+    n_plan = len(loads)
+    params = fit.params
+    speeds = np.asarray(fit.speeds, dtype=np.float64)
+    if n_plan != params.n:
+        params = dataclasses.replace(params, n=n_plan)
+        if speeds.shape[0] >= n_plan:
+            speeds = speeds[:n_plan]
+        else:
+            speeds = np.concatenate(
+                [speeds, np.ones(n_plan - speeds.shape[0])])
+        speeds = speeds / max(float(speeds.mean()), 1e-12)
+    pats = draw_patterns_hetero(params, loads, k, s, m, mc_iters,
+                                speeds=speeds, seed=seed,
+                                departed=tuple(departed))
     return mean_wait_s(pats)
 
 
 def score_plan(fit: FitResult, plan: Plan,
                cost_book: StepCostBook | None = None,
                mc_iters: int = 400, npts: int = 20_000,
-               seed: int = 0) -> Plan:
+               seed: int = 0,
+               departed: Sequence[int] = ()) -> Plan:
     """Re-score an existing plan under a (new) fit: returns a copy with
     fresh ``predicted_*`` fields.
 
@@ -166,20 +227,33 @@ def score_plan(fit: FitResult, plan: Plan,
     spread dropped back below the threshold) — hysteresis must always
     compare against a like-for-like prediction, never default to
     switching.
+
+    ``departed`` (elastic membership) marks workers that never respond:
+    any uniform plan is then priced by the same Monte-Carlo order
+    statistic the hetero family uses, with the departed workers' times
+    pinned to ``+inf`` — a plan whose drop budget cannot cover the
+    departures prices to ``inf`` and can never win hysteresis.  Indices
+    outside the plan's worker range are ignored (they refer to workers a
+    resize already removed).  A departed pipelined plan is priced with
+    the synchronous model (conservative: overlap can only help).
     """
     book = cost_book or StepCostBook()
-    if plan.family == "uniform":
+    n_plan = len(plan.loads)
+    dep = tuple(sorted({int(i) for i in departed if 0 <= int(i) < n_plan}))
+    if plan.family == "uniform" and not dep:
+        params = (fit.params if n_plan == fit.params.n
+                  else dataclasses.replace(fit.params, n=n_plan))
         if plan.pipelined:
             # overlapped steady state: per-worker cycle max(comp, comm)
             wait = expected_total_runtime_overlapped(
-                fit.params, plan.d, plan.s, plan.m, npts=npts,
+                params, plan.d, plan.s, plan.m, npts=npts,
                 eps=PIPELINE_EPS)
         else:
-            wait = expected_total_runtime(fit.params, plan.d, plan.s, plan.m,
+            wait = expected_total_runtime(params, plan.d, plan.s, plan.m,
                                           npts=npts)
     else:
         wait = _hetero_wait(fit, plan.loads, plan.k, plan.s, plan.m,
-                            mc_iters, seed)
+                            mc_iters, seed, departed=dep)
     step = book.cost(plan.d, plan.k, plan.loads, plan.schedule, plan.packed,
                      plan.pipelined)
     return dataclasses.replace(plan, predicted_wait_s=wait,
@@ -198,7 +272,11 @@ def rank_plans(fit: FitResult, *,
                hetero_k_factor: int = 4,
                mc_iters: int = 400,
                npts: int = 20_000,
-               seed: int = 0) -> list[Plan]:
+               seed: int = 0,
+               departed: Sequence[int] = (),
+               resize_options: Sequence[int] = (),
+               replan_horizon: int = 200,
+               amortize_compile: bool = False) -> list[Plan]:
     """Score and rank every reachable plan under a fitted straggler model.
 
     ``min_s`` floors the straggler budget (a production cluster usually
@@ -213,16 +291,39 @@ def rank_plans(fit: FitResult, *,
     synchronous).  Ties (e.g. two schedules with no measurements yet) break
     deterministically toward the earlier entry in ``schedules`` /
     ``packed_options`` / ``pipelined_options``.
+
+    **Elastic membership** (all default-off, so the classic ranking is
+    bit-identical when unused):
+
+    - ``departed`` — workers that never respond.  Every same-``n``
+      candidate is then priced by the Monte-Carlo order statistic with
+      those workers pinned to ``+inf`` (a budget that cannot cover them
+      prices to ``inf``), and the hetero family additionally offers
+      *stay-degraded* candidates: zero load at the departed indices via
+      :func:`~repro.core.hetero.plan_hetero`, restoring exact decode at
+      unchanged ``n``.  Same-``n`` pipelined candidates are suppressed —
+      the pipelined runtime cannot fail over per-step, and pricing
+      overlap with a permanent hole is not modeled.
+    - ``resize_options`` — alternative cluster sizes (e.g. ``n_alive``)
+      to price as uniform candidates, marked ``resize_to``.  A resize
+      candidate always pays :meth:`StepCostBook.amortized_compile` — the
+      mesh rebuild forces a retrace — amortized over ``replan_horizon``
+      steps, so a short horizon keeps the cluster on the degraded rung.
+    - ``amortize_compile=True`` extends the recompile charge to every
+      candidate (scheme switches also retrace); off by default to keep
+      the classic autotuner ranking unchanged.
     """
     n = fit.params.n
     book = cost_book or StepCostBook()
+    dep = tuple(sorted({int(i) for i in departed if 0 <= int(i) < n}))
 
     candidates: list[tuple] = []     # (total, tiebreak, Plan)
     sched_rank = {sc: i for i, sc in enumerate(schedules)}
     packed_rank = {pk: i for i, pk in enumerate(packed_options)}
     pipe_rank = {pi: i for i, pi in enumerate(pipelined_options)}
 
-    def add(family, d, s, m, k, loads, waits):
+    def add(family, d, s, m, k, loads, waits, resize_to=None,
+            charge_compile=False):
         # waits: {pipelined_flag: modeled wait} for the flags this scheme
         # supports (hetero passes only {False: ...})
         for schedule in schedules:
@@ -232,15 +333,20 @@ def rank_plans(fit: FitResult, *,
                         continue   # scheme doesn't support this flag
                     step = book.cost(d, k, loads, schedule, packed,
                                      pipelined)
+                    if charge_compile or amortize_compile:
+                        step += book.amortized_compile(
+                            d, k, loads, schedule, packed, pipelined,
+                            horizon=replan_horizon)
                     candidates.append((
                         wait + step,
-                        (sched_rank[schedule], packed_rank[packed],
+                        (0 if resize_to is None else 1,
+                         sched_rank[schedule], packed_rank[packed],
                          pipe_rank[pipelined]),
                         Plan(family=family, d=d, s=s, m=m, k=k, loads=loads,
                              schedule=schedule, packed=packed,
                              predicted_wait_s=wait, predicted_step_s=step,
                              predicted_total_s=wait + step,
-                             pipelined=pipelined)))
+                             pipelined=pipelined, resize_to=resize_to)))
 
     if "uniform" in families:
         for d in range(1, n + 1):
@@ -251,9 +357,17 @@ def rank_plans(fit: FitResult, *,
                 waits = {}
                 for pipelined in pipelined_options:
                     if pipelined:
+                        if dep:
+                            continue  # no per-step failover when pipelined
                         waits[True] = expected_total_runtime_overlapped(
                             fit.params, d, s, m, npts=npts,
                             eps=PIPELINE_EPS)
+                    elif dep:
+                        if s < len(dep):
+                            continue  # cannot cover the departures: inf
+                        waits[False] = _hetero_wait(
+                            fit, (d,) * n, n, s, m, mc_iters, seed,
+                            departed=dep)
                     else:
                         waits[False] = expected_total_runtime(
                             fit.params, d, s, m, npts=npts)
@@ -261,22 +375,39 @@ def rank_plans(fit: FitResult, *,
 
     want_hetero = ("hetero!" in families
                    or ("hetero" in families
-                       and fit.speed_spread >= hetero_threshold))
+                       and fit.speed_spread >= hetero_threshold)
+                   or bool(dep))   # stay-degraded rung needs the family
     if want_hetero:
         k = hetero_k_factor * n
         for r in range(2, n + 1):            # replication s + m
             for m in range(1, r + 1):
                 s = r - m
-                if s < max(min_s, 1):
+                if s < max(min_s, 1, len(dep)):
                     continue                  # hetero needs a real budget
                 try:
-                    plan = plan_hetero(fit.speeds, s, m, k=k)
+                    plan = plan_hetero(fit.speeds, s, m, k=k, departed=dep)
                 except ValueError:
                     continue
                 wait = _hetero_wait(fit, plan.loads, plan.k, s, m,
-                                    mc_iters, seed)
+                                    mc_iters, seed, departed=dep)
                 add("hetero", max(plan.loads), s, m, plan.k,
-                    tuple(plan.loads), {False: wait})
+                    tuple(plan.loads), {False: wait},
+                    charge_compile=bool(dep))
+
+    for new_n in resize_options:
+        new_n = int(new_n)
+        if new_n < 1 or new_n == n:
+            continue
+        for d in range(1, new_n + 1):
+            for m in range(1, d + 1):
+                s = d - m
+                if s < min_s:
+                    continue
+                loads = (d,) * new_n
+                wait = _hetero_wait(fit, loads, new_n, s, m,
+                                    mc_iters, seed)
+                add("uniform", d, s, m, new_n, loads, {False: wait},
+                    resize_to=new_n, charge_compile=True)
 
     candidates.sort(key=lambda c: (c[0], c[1]))
     return [c[2] for c in candidates]

@@ -53,6 +53,14 @@ class AutotunePolicy:
     mc_iters: int = 400             # Monte-Carlo draws per hetero candidate
     npts: int = 20_000              # integration grid for E[T_tot]
     seed: int = 0
+    #: elastic membership: cluster sizes to price as resize candidates
+    #: when workers have departed.  Entries <= 0 are relative to the
+    #: alive count (0 = "resize to n_alive", -1 = one fewer); positive
+    #: entries are absolute sizes.  Every resize candidate pays the
+    #: recompile charge amortized over ``replan_horizon`` steps.
+    #: Empty = never propose a resize.
+    resize_options: tuple[int, ...] = ()
+    replan_horizon: int = 200       # steps the recompile charge spreads over
 
 
 class Autotuner:
@@ -81,11 +89,21 @@ class Autotuner:
         return (self._steps_since_plan >= self.policy.interval
                 and len(self.telemetry) >= self.policy.min_samples)
 
-    def maybe_replan(self, step: int) -> Plan | None:
+    def maybe_replan(self, step: int,
+                     departed: tuple[int, ...] = ()) -> Plan | None:
         """Fit + rank when due; return the new plan iff a switch is called.
 
         Returns ``None`` both when not yet due and when the ranking keeps
         the active plan (the hold decision is still logged to ``events``).
+
+        ``departed`` (elastic membership) names workers that never
+        respond: the ranking prices every same-``n`` candidate with those
+        workers pinned unresponsive, offers stay-degraded hetero
+        candidates (zero load at the departed indices), and — when the
+        policy carries ``resize_options`` — prices resize candidates with
+        the recompile charge amortized over ``replan_horizon``.  The
+        active plan's hysteresis re-score sees the same departed set, so
+        a degraded incumbent is priced at its true (departed-aware) cost.
         """
         p = self.policy
         if not self.due():
@@ -115,13 +133,24 @@ class Autotuner:
             self.events.append(event)
             return None
         book = step_cost_book(window)
+        dep = tuple(sorted({int(i) for i in departed
+                            if 0 <= int(i) < fit.params.n}))
+        resize: list[int] = []
+        if dep:
+            n_alive = fit.params.n - len(dep)
+            for r in p.resize_options:
+                new_n = n_alive + int(r) if r <= 0 else int(r)
+                if 1 <= new_n != fit.params.n and new_n not in resize:
+                    resize.append(new_n)
         ranked = rank_plans(
             fit, schedules=p.schedules, families=p.families,
             packed_options=p.packed_options,
             pipelined_options=p.pipelined_options,
             cost_book=book, min_s=p.min_s,
             hetero_threshold=p.hetero_threshold, mc_iters=p.mc_iters,
-            npts=p.npts, seed=p.seed + step)
+            npts=p.npts, seed=p.seed + step,
+            departed=dep, resize_options=tuple(resize),
+            replan_horizon=p.replan_horizon)
         if not ranked:
             return None
         best = ranked[0]
@@ -138,7 +167,8 @@ class Autotuner:
                 # of defaulting to a switch
                 current_pred = score_plan(
                     fit, self.current, cost_book=book, mc_iters=p.mc_iters,
-                    npts=p.npts, seed=p.seed + step).predicted_total_s
+                    npts=p.npts, seed=p.seed + step,
+                    departed=dep).predicted_total_s
         switch = (
             self.current is None
             or best.predicted_total_s

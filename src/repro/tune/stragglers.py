@@ -51,6 +51,20 @@ class StragglerDraw:
     times: WorkerTimes | None = None
     wait_s: float = 0.0
 
+    def restrict(self, n: int) -> "StragglerDraw":
+        """A copy with straggler indices outside ``0..n-1`` dropped.
+
+        The elastic-membership case: after a resize a source (or a stale
+        churn trace) may still name workers that no longer exist; the
+        trainer restricts every draw to the active code's ``n`` so those
+        indices cannot corrupt the decode-weight solve.  Returns ``self``
+        when nothing is out of range (the common case allocates nothing).
+        """
+        if all(0 <= i < n for i in self.stragglers):
+            return self
+        kept = tuple(i for i in self.stragglers if 0 <= i < n)
+        return dataclasses.replace(self, stragglers=kept)
+
 
 @runtime_checkable
 class StragglerSource(Protocol):

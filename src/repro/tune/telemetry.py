@@ -62,9 +62,13 @@ class WorkerTimes:
 
         The wait is the ``(n - n_drop)``-th order statistic of the totals —
         the same bookkeeping as
-        :func:`repro.bench.straggler.draw_patterns`.
+        :func:`repro.bench.straggler.draw_patterns`.  Missing per-worker
+        times (NaN — a worker whose heartbeat never arrived, e.g. one that
+        departed mid-step) are treated as ``+inf``: the worker is always
+        among the dropped and the wait stays finite as long as the drop
+        budget covers the missing workers.
         """
-        t = self.total_s
+        t = np.where(np.isnan(self.total_s), np.inf, self.total_s)
         n = t.shape[0]
         order = np.argsort(t)
         slow = tuple(int(i) for i in order[n - n_drop:]) if n_drop else ()
@@ -89,6 +93,7 @@ class StepRecord:
     wait_s: float = 0.0         # modeled master wait (order statistic)
     measured_step_s: float = 0.0  # wall-clock of the jitted step
     pipelined: bool = False     # async double-buffered wire (stale-1)
+    compile_s: float = 0.0      # one-time trace+compile wall of fresh steps
 
     @property
     def n(self) -> int:
@@ -111,12 +116,17 @@ def scheme_k(code) -> int:
 def record_from_times(step: int, code, schedule: str, packed: bool,
                       times: WorkerTimes, n_drop: int | None = None,
                       measured_step_s: float = 0.0,
-                      pipelined: bool = False) -> StepRecord:
+                      pipelined: bool = False,
+                      compile_s: float = 0.0) -> StepRecord:
     """Build a :class:`StepRecord` from a code object and a timing draw.
 
     ``code`` is any scheme with the ``GradCode`` duck surface (``d``, ``s``,
     ``m``, ``num_subsets``, ``loads``); ``n_drop`` defaults to the design
-    ``s`` (the master drops the slowest ``s`` workers).
+    ``s`` (the master drops the slowest ``s`` workers).  ``compile_s``
+    carries the one-time trace+compile wall of a fresh executable's first
+    call — the planner's :class:`~repro.tune.planner.StepCostBook` pools it
+    into the recompile-amortization charge for membership-aware
+    (stay-degraded vs resize) candidates.
     """
     slow, wait = times.order_stat(code.s if n_drop is None else n_drop)
     return StepRecord(
@@ -125,7 +135,7 @@ def record_from_times(step: int, code, schedule: str, packed: bool,
         schedule=schedule, packed=packed,
         compute_s=times.compute_s, comm_s=times.comm_s,
         stragglers=slow, wait_s=wait, measured_step_s=measured_step_s,
-        pipelined=pipelined)
+        pipelined=pipelined, compile_s=compile_s)
 
 
 class TelemetryLog:

@@ -33,12 +33,13 @@ def _results_for(name: str):
 def test_registry_has_all_targets():
     assert set(REGISTRY) == {"table1", "stability", "fig3", "auc",
                              "throughput", "straggler", "roofline",
-                             "coding_packed", "autotune", "serving"}
+                             "coding_packed", "autotune", "serving",
+                             "elastic"}
 
 
 @pytest.mark.parametrize("name", sorted(
     {"table1", "stability", "fig3", "auc", "throughput", "straggler",
-     "roofline", "coding_packed", "autotune", "serving"}))
+     "roofline", "coding_packed", "autotune", "serving", "elastic"}))
 def test_quick_bench_runs_and_validates(name, tmp_path):
     results = _results_for(name)
     assert results, f"{name} emitted no results"

@@ -1,0 +1,126 @@
+"""`StragglerDraw` / `as_straggler_source` edge cases: empty draws, draws
+naming workers outside the active code (the post-resize hazard), missing
+per-worker times, and coercion failures."""
+import numpy as np
+import pytest
+
+from repro.coding import make_step_inputs
+from repro.core import make_code
+from repro.tune import (FixedStragglers, NoStragglers, RandomStragglers,
+                        StragglerDraw, TimedSource, WorkerTimes,
+                        as_straggler_source)
+
+
+# ------------------------------------------------------------- coercion
+def test_as_straggler_source_none_is_no_stragglers():
+    src = as_straggler_source(None)
+    assert isinstance(src, NoStragglers)
+    assert src.provides_times is False
+    d = src.draw(0, make_code(4, 3, 1, 2))
+    assert d.stragglers == () and d.times is None and d.wait_s == 0.0
+
+
+def test_as_straggler_source_passes_sources_through():
+    src = FixedStragglers([2])
+    assert as_straggler_source(src) is src
+
+
+def test_as_straggler_source_wraps_injector_callable():
+    def injector(step, code):
+        return WorkerTimes(compute_s=np.ones(code.n),
+                           comm_s=np.zeros(code.n))
+    src = as_straggler_source(injector)
+    assert isinstance(src, TimedSource)
+    assert src.provides_times is True
+
+
+def test_as_straggler_source_rejects_noncallable():
+    with pytest.raises(TypeError, match="StragglerSource"):
+        as_straggler_source(42)
+
+
+# --------------------------------------------------------- empty draws
+def test_fixed_stragglers_empty_set():
+    d = FixedStragglers([]).draw(0, make_code(4, 3, 1, 2))
+    assert d.stragglers == ()
+
+
+def test_random_stragglers_s0_always_empty():
+    code = make_code(3, 1, 0, 1)
+    src = RandomStragglers(seed=0)
+    assert all(src.draw(i, code).stragglers == () for i in range(10))
+
+
+def test_random_stragglers_within_budget_and_range():
+    code = make_code(4, 3, 1, 2)
+    src = RandomStragglers(seed=7)
+    for i in range(50):
+        st = src.draw(i, code).stragglers
+        assert len(st) <= code.s
+        assert all(0 <= w < code.n for w in st)
+
+
+# --------------------------- draws naming workers outside the code's n
+def test_restrict_drops_out_of_range_workers():
+    d = StragglerDraw(stragglers=(1, 3, 6, 9))
+    assert d.restrict(4).stragglers == (1, 3)
+    assert d.restrict(10) is d              # in-range: no copy
+
+
+def test_restrict_preserves_times_and_wait():
+    t = WorkerTimes(compute_s=np.ones(4), comm_s=np.ones(4))
+    d = StragglerDraw(stragglers=(5,), times=t, wait_s=2.5)
+    r = d.restrict(4)
+    assert r.stragglers == () and r.times is t and r.wait_s == 2.5
+
+
+def test_step_inputs_reject_out_of_range_stragglers():
+    # the failure restrict() exists to prevent: a stale draw naming a
+    # worker the resize removed must raise, not corrupt the decode
+    code = make_code(4, 3, 1, 2)
+    with pytest.raises(ValueError, match="restrict"):
+        make_step_inputs(code, [5])
+    with pytest.raises(ValueError, match="restrict"):
+        make_step_inputs(code, [-1])
+
+
+# ------------------------------------------- missing per-worker times
+def test_order_stat_missing_times_always_dropped():
+    # NaN = the heartbeat never arrived (departed mid-step): the worker
+    # must be among the dropped for any budget, and the wait stays finite
+    t = WorkerTimes(compute_s=np.array([1.0, np.nan, 3.0, 2.0]),
+                    comm_s=np.zeros(4))
+    slow, wait = t.order_stat(1)
+    assert slow == (1,)
+    assert wait == 3.0
+
+
+def test_order_stat_budget_cannot_cover_missing_is_inf():
+    t = WorkerTimes(compute_s=np.array([1.0, np.nan, np.nan]),
+                    comm_s=np.zeros(3))
+    _, wait = t.order_stat(1)               # one drop, two missing
+    assert np.isinf(wait)
+    _, wait2 = t.order_stat(2)
+    assert wait2 == 1.0
+
+
+def test_timed_source_nan_worker_is_straggler_every_draw():
+    def injector(step, code):
+        comp = np.ones(code.n)
+        comp[2] = np.nan
+        return WorkerTimes(compute_s=comp, comm_s=np.zeros(code.n))
+    src = TimedSource(injector)
+    code = make_code(4, 3, 1, 2)
+    for i in range(5):
+        d = src.draw(i, code)
+        assert 2 in d.stragglers
+        assert np.isfinite(d.wait_s)
+
+
+def test_timed_source_n_drop_override():
+    def injector(step, code):
+        return WorkerTimes(compute_s=np.arange(code.n, dtype=float),
+                           comm_s=np.zeros(code.n))
+    d = TimedSource(injector, n_drop=2).draw(0, make_code(4, 3, 1, 2))
+    assert d.stragglers == (2, 3)
+    assert d.wait_s == 1.0

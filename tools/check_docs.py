@@ -9,9 +9,11 @@ Checks, over the `docs/` tree and `mkdocs.yml`:
   3. every `::: module.path` mkdocstrings directive imports;
   4. docstring coverage: every public symbol re-exported by
      ``repro.coding.__all__``, ``repro.bench.__all__``,
-     ``repro.tune.__all__`` and ``repro.serving.__all__`` has a nonempty
+     ``repro.tune.__all__``, ``repro.serving.__all__`` and
+     ``repro.elastic.__all__`` has a nonempty
      docstring, and an AST-level scan of ``src/repro/coding/*.py`` +
      ``src/repro/tune/*.py`` + ``src/repro/serving/*.py`` +
+     ``src/repro/elastic/*.py`` +
      ``src/repro/train/coded_step.py`` + ``src/repro/train/pipeline.py``
      + the documented ``repro.core``
      modules (hetero, runtime_model, tradeoff, stability) finds no
@@ -38,6 +40,7 @@ DOCSTRING_SCOPE = (
     sorted((ROOT / "src/repro/coding").glob("*.py"))
     + sorted((ROOT / "src/repro/tune").glob("*.py"))
     + sorted((ROOT / "src/repro/serving").glob("*.py"))
+    + sorted((ROOT / "src/repro/elastic").glob("*.py"))
     + [
         ROOT / "src/repro/train/coded_step.py",
         ROOT / "src/repro/train/pipeline.py",
@@ -89,7 +92,7 @@ def check_directives(errors: list[str]) -> None:
 def check_public_api_docstrings(errors: list[str]) -> None:
     """Every re-exported public symbol carries a nonempty docstring."""
     for modname in ("repro.coding", "repro.bench", "repro.tune",
-                    "repro.serving"):
+                    "repro.serving", "repro.elastic"):
         mod = importlib.import_module(modname)
         for name in getattr(mod, "__all__", []):
             obj = getattr(mod, name, None)
