@@ -1,0 +1,236 @@
+"""Approximate-family bench: encode cost, any-pattern completion, calibration.
+
+Three gated claims for the FRC + expander tentpole:
+
+  encode_cost_ratio            sparse 0/1 construction + encode wall vs the
+                               Vandermonde scheme at the same (n, d, m) —
+                               the approx families skip the polynomial
+                               solve and the dense ``B @ V`` product, so
+                               the ratio stays well under 1 (gated "min")
+  approx_completes_any_pattern both families decode certified estimates
+                               through the real jitted partial step for
+                               straggler patterns of every size 0..n-1 —
+                               including far past the structural budget
+                               (the exact scheme raises there)
+  err_bound_holds              on every sampled pattern the realised
+                               certificate stays under ``worst_err_bound``
+                               and the true L2 gap stays under the
+                               certificate — the planner's admission logic
+                               rests on this chain
+  planner_respects_ceiling     ``rank_plans(approx_options=, max_err=)``
+                               admits an approx candidate iff its bound
+                               clears the ceiling, across a ceiling grid
+
+Ungated extras record the bound-vs-actual calibration (mean and worst
+realised-factor / bound ratio per straggler count) so drift in the
+spectral bound's tightness is visible in reports before it gates.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np
+
+from repro.bench import BenchResult, BenchSpec, capture_env, register
+from repro.core import make_code, make_expander, make_frc
+from repro.core.approx import APPROX_FAMILIES
+from repro.core.stability import sample_straggler_sets
+
+N_ENCODE = 20                 # the Vandermonde scheme's documented limit
+N_STEP = 4                    # host-mesh size for the jitted-step sweep
+
+
+# ------------------------------------------------------------- encode cost
+def _time_build_encode(make, G, reps: int) -> float:
+    """Median wall of (fresh construction + C materialisation + encode)."""
+    walls = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        code = make()
+        code.C            # materialise the coefficient tensor
+        code.encode(G)
+        walls.append(time.perf_counter() - t0)
+    return float(np.median(walls))
+
+
+def encode_cost_ratio(reps: int = 5, l: int = 64) -> dict[str, float]:
+    """Approx-family build+encode wall over the Vandermonde scheme's, at
+    matched (n, d, m) = (20, 4, 2)."""
+    rng = np.random.default_rng(0)
+    G = rng.standard_normal((N_ENCODE, l))
+    t_vand = _time_build_encode(
+        lambda: make_code(N_ENCODE, 4, 2, 2, kind="poly"), G, reps)
+    t_frc = _time_build_encode(lambda: make_frc(N_ENCODE, 1, 2), G, reps)
+    t_exp = _time_build_encode(
+        lambda: make_expander(N_ENCODE, 2, 2), G, reps)
+    return {"vandermonde_s": t_vand, "frc_s": t_frc, "expander_s": t_exp,
+            "ratio": 0.5 * (t_frc + t_exp) / max(t_vand, 1e-12)}
+
+
+# -------------------------------------------------- any-pattern completion
+def _jitted_step_sweep() -> tuple[bool, list[str]]:
+    """Both families through ``make_coded_train_step(partial=True)`` for one
+    sampled pattern of every straggler count 0..n-1: finite params + bound."""
+    import dataclasses as _dc
+
+    import jax
+    import jax.numpy as jnp
+
+    import repro.coding as coding
+    from repro.configs import get_config
+    from repro.data import CodedBatcher, make_synthetic_batch
+    from repro.launch.mesh import make_local_mesh
+    from repro.models import api as model_api
+    from repro.optim import get_optimizer
+    from repro.train.coded_step import make_coded_train_step
+
+    cfg = _dc.replace(get_config("logistic-paper"), d_model=64)
+    mesh = make_local_mesh(N_STEP, 1)
+    opt = get_optimizer("sgd", 1e-2)
+    batch = make_synthetic_batch(np.random.default_rng(0), cfg, 16, 0)
+    params = model_api.init(jax.random.PRNGKey(0), cfg)
+
+    lines, ok = [], True
+    for code in (make_frc(N_STEP, 1, 1), make_expander(N_STEP, 2, 1)):
+        arts = make_coded_train_step(
+            cfg, code, mesh, opt,
+            spec=coding.SchemeSpec(schedule="gather", partial=True))
+        placed = jax.tree.map(jnp.asarray, CodedBatcher(code).place(batch))
+        fn = arts.compiled(placed)
+        for t in range(code.n):
+            st = next(iter(sample_straggler_sets(code.n, t, 1, seed=t)))
+            inp = arts.step_inputs(st)
+            p2, _, metrics = fn(params, opt.init(params), placed,
+                                inp["W"], inp["mask"], inp["rho"],
+                                inp["err_factor"])
+            bound = float(metrics["decode_err_bound"][0])
+            finite = (np.isfinite(bound)
+                      and all(np.isfinite(np.asarray(x)).all()
+                              for x in jax.tree.leaves(p2)))
+            ok = ok and finite
+            lines.append(f"approx_step,{type(code).__name__},t={t},"
+                         f"stragglers={list(st)},bound={bound:.4g},"
+                         f"finite={int(finite)}")
+    return ok, lines
+
+
+# ------------------------------------------------------ certificate audit
+def certificate_audit(trials: int, l: int = 48, seed: int = 0):
+    """Sampled-pattern audit of the certificate chain for both families:
+    realised factor <= worst_err_bound(t) and true gap <= certificate."""
+    rng = np.random.default_rng(seed)
+    codes = [make_frc(8, 1, 2), make_frc(8, 3, 1),
+             make_expander(8, 2, 2), make_expander(8, 4, 1)]
+    holds, checked = 0, 0
+    calib: dict[int, list[float]] = {}
+    for code in codes:
+        G = rng.standard_normal((code.num_subsets, l))
+        F = code.encode(G)
+        truth = G.sum(0)
+        for t in range(1, code.n):
+            bound = code.worst_err_bound(t)
+            for st in sample_straggler_sets(code.n, t, trials,
+                                            seed=seed + 13 * t):
+                resp = np.setdiff1d(np.arange(code.n), st)
+                W, factor = code.partial_decode_weights(resp)
+                mask = np.isin(np.arange(code.n), resp).astype(float)
+                ghat = np.einsum("nv,nu->vu", F * mask[:, None],
+                                 W).reshape(-1)
+                gap = float(np.linalg.norm(ghat - truth))
+                cert = factor * float(np.linalg.norm(G))
+                checked += 1
+                if factor <= bound + 1e-9 and gap <= cert * (1 + 1e-6) + 1e-6:
+                    holds += 1
+                if bound > 0:
+                    calib.setdefault(t, []).append(factor / bound)
+    ratios = {str(t): {"mean": float(np.mean(v)), "max": float(np.max(v))}
+              for t, v in sorted(calib.items())}
+    return holds / max(checked, 1), checked, ratios
+
+
+# ------------------------------------------------------------ planner check
+def planner_ceiling_check(npts: int) -> bool:
+    """Admission is exactly ``worst_err_bound(s) <= max_err`` over a grid."""
+    from repro.core.runtime_model import RuntimeParams
+    from repro.tune.estimator import FitResult
+    from repro.tune.planner import rank_plans
+
+    params = RuntimeParams(n=8, lambda1=2.0, lambda2=1.0, t1=0.01, t2=0.05)
+    fit = FitResult(params=params, speeds=np.ones(8), n_steps=64,
+                    n_samples=64)
+    if any(p.family in APPROX_FAMILIES
+           for p in rank_plans(fit, approx_options=APPROX_FAMILIES,
+                               max_err=-1.0, npts=npts)):
+        return False
+    for ceiling in (0.0, 0.5, 1.5, 3.0):
+        plans = rank_plans(fit, approx_options=APPROX_FAMILIES,
+                           max_err=ceiling, npts=npts)
+        ap = [p for p in plans if p.family in APPROX_FAMILIES]
+        if not ap:
+            return False
+        if any(p.err_bound > ceiling + 1e-12 for p in ap):
+            return False
+    return True
+
+
+# ----------------------------------------------------------------- results
+def bench_results(quick: bool = False) -> list[BenchResult]:
+    reps = 3 if quick else 7
+    trials = 4 if quick else 12
+    npts = 4_000 if quick else 20_000
+
+    enc = encode_cost_ratio(reps=reps)
+    completes, lines = _jitted_step_sweep()
+    holds_frac, checked, calib = certificate_audit(trials)
+    planner_ok = planner_ceiling_check(npts)
+
+    lines.append(f"approx_encode,vandermonde={enc['vandermonde_s']:.4g}s,"
+                 f"frc={enc['frc_s']:.4g}s,expander={enc['expander_s']:.4g}s,"
+                 f"ratio={enc['ratio']:.3g}")
+    lines.append(f"approx_certificates,checked={checked},"
+                 f"holds={holds_frac:.4f}")
+    lines.append(f"approx_planner,respects_ceiling={int(planner_ok)}")
+
+    result = BenchResult(
+        name="approx",
+        metrics={
+            "encode_cost_ratio": enc["ratio"],
+            "approx_completes_any_pattern": float(completes),
+            "err_bound_holds": float(holds_frac == 1.0),
+            "planner_respects_ceiling": float(planner_ok),
+        },
+        params={"n_encode": N_ENCODE, "n_step": N_STEP, "reps": reps,
+                "trials": trials, "quick": quick},
+        env=capture_env(),
+        timing={"warmup": 0, "reps": reps,
+                "policy": "median build+encode wall"},
+        gates={"encode_cost_ratio": "min",
+               "approx_completes_any_pattern": "max",
+               "err_bound_holds": "max",
+               "planner_respects_ceiling": "max"},
+        extra={"lines": lines, "encode": enc, "calibration": calib,
+               "certificates_checked": checked},
+    )
+    return [result]
+
+
+register(BenchSpec(
+    name="approx",
+    description="FRC/expander approx family: encode cost, any-pattern "
+                "completion, certificate calibration",
+    fn=bench_results,
+    tags=("model", "approx"),
+))
+
+
+def run() -> list[str]:
+    return bench_results(False)[0].extra["lines"]
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

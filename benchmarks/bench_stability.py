@@ -11,20 +11,22 @@ import numpy as np
 
 from repro.bench import BenchResult, BenchSpec, capture_env, register
 from repro.core import GradCode
+from repro.core.stability import sample_straggler_sets
 
 
 def worst_decode_error(code: GradCode, trials: int = 20, l: int = 64,
                        seed: int = 0, straggler_sets: int = 30) -> float:
-    """Max over random straggler sets of the relative decode error."""
+    """Max over random straggler sets of the relative decode error (seeded
+    trial driver shared with the stability module's sweep)."""
     rng = np.random.default_rng(seed)
     worst = 0.0
-    for _ in range(trials):
+    for t in range(trials):
         G = rng.standard_normal((code.n, l))
         want = G.sum(0)
         F = code.encode(G)
-        for _ in range(straggler_sets):
-            k = rng.integers(0, code.s + 1)
-            st = rng.choice(code.n, size=k, replace=False)
+        for st in sample_straggler_sets(code.n, (0, code.s), straggler_sets,
+                                        seed=seed + 7919 * (t + 1),
+                                        dedupe=False):
             resp = np.setdiff1d(np.arange(code.n), st)
             got = code.decode(F, resp)
             err = np.max(np.abs(got - want)) / max(np.max(np.abs(want)), 1e-12)

@@ -5,6 +5,10 @@ Public API:
   HeteroCode, make_hetero_code,
   HeteroPlan, plan_hetero           — heterogeneous-load scheme family and
                                       partial-recovery decode (``hetero``)
+  FractionalRepetitionCode,
+  ExpanderCode, make_frc,
+  make_expander                     — approximate families with certified
+                                      decode from any pattern (``approx``)
   tradeoff                          — Theorem 1 feasibility helpers
   runtime_model                     — Section VI shifted-exponential model
   stability                         — Theorem 2 / condition-number machinery
@@ -13,14 +17,18 @@ The pre-PR-1 ``coded_allreduce`` surface lived on here as a deprecation
 shim through PR 6 and was removed in PR 7 (no in-repo importers remained);
 use ``repro.coding`` directly.
 """
-from . import (cyclic, hetero, polynomial, random_code, runtime_model,
-               stability, tradeoff)
+from . import (approx, cyclic, hetero, polynomial, random_code,
+               runtime_model, stability, tradeoff)
+from .approx import (ExpanderCode, FractionalRepetitionCode, make_approx,
+                     make_expander, make_frc)
 from .hetero import HeteroCode, HeteroPlan, make_hetero_code, plan_hetero
 from .schemes import GradCode, make_code, uncoded
 
 __all__ = [
     "GradCode", "make_code", "uncoded",
     "HeteroCode", "HeteroPlan", "make_hetero_code", "plan_hetero",
-    "cyclic", "hetero", "polynomial", "random_code",
+    "FractionalRepetitionCode", "ExpanderCode",
+    "make_frc", "make_expander", "make_approx",
+    "approx", "cyclic", "hetero", "polynomial", "random_code",
     "runtime_model", "stability", "tradeoff",
 ]

@@ -422,7 +422,14 @@ class HeteroCode:
 
     def partial_decode_weights(self, responders) -> tuple[np.ndarray, float]:
         """Least-squares weights + error certificate for *any* responder set
-        (including fewer than n - s).  See :func:`partial_decode_weights`."""
+        (including fewer than n - s).  A full responder set short-circuits
+        to the exact solve with ``err_factor`` exactly 0.0.  See
+        :func:`partial_decode_weights`."""
+        responders = np.asarray(list(responders))
+        if responders.dtype == bool:
+            responders = np.nonzero(responders)[0]
+        if len(set(int(i) for i in responders)) == self.n:
+            return self.decode_weights(responders), 0.0
         return partial_decode_weights(self.P, self.n, self.m, responders)
 
     # ------------------------------------------------------- numpy reference

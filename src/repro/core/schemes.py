@@ -126,9 +126,16 @@ class GradCode:
         Returns ``(W, err_factor)``: the L2 decode error is bounded by
         ``err_factor * sqrt(sum_j ||g_j||^2)`` for every gradient
         realisation; the factor is ~0 whenever ``len(responders) >= n - s``.
+        A full responder set short-circuits to the exact solve with
+        ``err_factor`` exactly 0.0 (no least-squares residual evaluation).
         See :mod:`repro.core.hetero` for the math.
         """
         from .hetero import partial_decode_weights
+        responders = np.asarray(list(responders))
+        if responders.dtype == bool:
+            responders = np.nonzero(responders)[0]
+        if len(set(int(i) for i in responders)) == self.n:
+            return self.decode_weights(responders), 0.0
         return partial_decode_weights(self.P, self.n, self.m, responders)
 
     def reconstruction_condition_number(self, responders) -> float:

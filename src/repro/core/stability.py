@@ -95,6 +95,39 @@ def circulant_submatrices_invertible(V: np.ndarray, n2: int,
     return True
 
 
+def sample_straggler_sets(n: int, size, trials: int, seed: int = 0, *,
+                          dedupe: bool = True):
+    """Seeded random straggler index tuples — the shared trial driver for
+    the stability sweep, the straggler-bench decode sweeps and the approx
+    certificate calibration (they previously each carried an ad-hoc loop).
+
+    ``size`` is either a fixed set size or an inclusive ``(lo, hi)`` range
+    drawn uniformly per trial.  Yields sorted tuples; with ``dedupe=True``
+    (the default) repeated draws are skipped, so fewer than ``trials``
+    tuples may be produced.
+    """
+    if n < 1:
+        raise ValueError(f"need n >= 1 workers, got {n}")
+    rng = np.random.default_rng(seed)
+    seen: set[tuple[int, ...]] = set()
+    for _ in range(trials):
+        if isinstance(size, tuple):
+            lo, hi = size
+            sz = int(rng.integers(lo, hi + 1))
+        else:
+            sz = int(size)
+        if not 0 <= sz <= n:
+            raise ValueError(f"straggler set size {sz} outside 0..{n}")
+        st = (tuple(sorted(int(x) for x in
+                           rng.choice(n, size=sz, replace=False)))
+              if sz else ())
+        if dedupe:
+            if st in seen:
+                continue
+            seen.add(st)
+        yield st
+
+
 def worst_decode_relative_error(code: GradCode, l: int = 64, trials: int = 32,
                                 seed: int = 0, dtype=np.float64) -> float:
     """End-to-end worst relative l_inf decode error over sampled straggler sets
@@ -105,12 +138,7 @@ def worst_decode_relative_error(code: GradCode, l: int = 64, trials: int = 32,
     truth = G.sum(axis=0)
     scale = np.abs(truth).max()
     worst = 0.0
-    seen = set()
-    for _ in range(trials):
-        st = tuple(sorted(rng.choice(code.n, size=code.s, replace=False))) if code.s else ()
-        if st in seen:
-            continue
-        seen.add(st)
+    for st in sample_straggler_sets(code.n, code.s, trials, seed=seed + 1):
         resp = np.setdiff1d(np.arange(code.n), st)
         try:
             got = code.decode(F, resp)

@@ -250,11 +250,17 @@ class Trainer:
 
     def _current_plan(self):
         """The active scheme as a `repro.tune.Plan` (seed for hysteresis)."""
+        from repro.core.approx import ExpanderCode, FractionalRepetitionCode
         from repro.tune import Plan, scheme_k, scheme_loads
         k = scheme_k(self.code)
         loads = scheme_loads(self.code)
-        fam = ("uniform" if k == self.code.n and len(set(loads)) == 1
-               else "hetero")
+        if isinstance(self.code, FractionalRepetitionCode):
+            fam = "frc"
+        elif isinstance(self.code, ExpanderCode):
+            fam = "expander"
+        else:
+            fam = ("uniform" if k == self.code.n and len(set(loads)) == 1
+                   else "hetero")
         return Plan(family=fam, d=self.code.d, s=self.code.s, m=self.code.m,
                     k=k, loads=loads, schedule=self.schedule,
                     packed=self.packed, predicted_wait_s=0.0,
@@ -266,6 +272,13 @@ class Trainer:
         n = len(plan.loads)
         if plan.family == "uniform":
             return make_code(n, plan.d, plan.s, plan.m)
+        if plan.family in ("frc", "expander"):
+            # the construction is recoverable from (family, d, m) alone:
+            # both approx families use d = m * replication, and the
+            # expander graph seed is pinned to the planner's default (0)
+            # so the materialised graph is the one that was ranked
+            from repro.core.approx import make_approx
+            return make_approx(plan.family, n, plan.d // plan.m, plan.m)
         # hetero plans carry their exact load assignment (which may encode
         # elastic zero-load holes at departed workers) — build the code
         # from those loads directly rather than re-deriving from speeds,
@@ -302,8 +315,20 @@ class Trainer:
         self.batcher = CodedBatcher(code)
 
     def _apply_plan(self, plan) -> None:
-        """Adopt a ranked plan: materialise its code and swap it in."""
-        self._swap_code(self._code_for_plan(plan), plan.schedule,
+        """Adopt a ranked plan: materialise its code and swap it in.
+
+        An approx plan whose drop budget exceeds the code's structural
+        tolerance (``plan.s > code.s`` — the planner traded bounded decode
+        error for wall-clock) flips the trainer to partial mode: the step
+        must decode a certified estimate instead of raising past ``s``.
+        """
+        code = self._code_for_plan(plan)
+        if plan.family in ("frc", "expander") and plan.s > code.s:
+            self.partial = True
+            # approx plans are never pipelined; drop the flag in the same
+            # replace (SchemeSpec rejects partial+pipelined)
+            self.spec = self.spec.replace(partial=True, pipelined=False)
+        self._swap_code(code, plan.schedule,
                         plan.packed, getattr(plan, "pipelined", False))
 
     @property

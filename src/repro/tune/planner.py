@@ -37,8 +37,10 @@ from typing import Sequence
 import numpy as np
 
 from repro.bench.straggler import draw_patterns_hetero, mean_wait_s
+from repro.core.approx import APPROX_FAMILIES, approx_candidates
 from repro.core.hetero import plan_hetero
-from repro.core.runtime_model import (expected_total_runtime,
+from repro.core.runtime_model import (expected_order_stat,
+                                      expected_total_runtime,
                                       expected_total_runtime_overlapped)
 
 from .estimator import FitResult
@@ -56,9 +58,9 @@ PIPELINE_EPS = 1e-3
 class Plan:
     """One ranked operating point: scheme + schedule + wire format + cost."""
 
-    family: str                 # "uniform" | "hetero"
+    family: str                 # "uniform" | "hetero" | "frc" | "expander"
     d: int                      # computation load (max per-worker for hetero)
-    s: int                      # straggler budget
+    s: int                      # straggler budget (drop budget for approx)
     m: int                      # communication reduction
     k: int                      # data subsets (n for uniform)
     loads: tuple[int, ...]      # per-worker subset counts
@@ -69,6 +71,9 @@ class Plan:
     predicted_total_s: float    # wait + step: the ranking key
     pipelined: bool = False     # async double-buffered wire (stale-1)
     resize_to: int | None = None  # elastic: rebuild the cluster at this n
+    #: approx families: worst-case decode-error certificate at the plan's
+    #: drop budget ``s`` (``worst_err_bound(s)``); 0.0 for exact families
+    err_bound: float = 0.0
 
     @property
     def scheme_key(self) -> tuple:
@@ -81,8 +86,10 @@ class Plan:
         extra = f",loads={list(self.loads)},k={self.k}" \
             if self.family == "hetero" else ""
         resize = f",resize->{self.resize_to}" if self.resize_to else ""
+        err = (f",err<={self.err_bound:.3g}"
+               if self.family in APPROX_FAMILIES else "")
         return (f"{self.family}(d={self.d},s={self.s},m={self.m}"
-                f"{extra}),{self.schedule},"
+                f"{extra}{err}),{self.schedule},"
                 f"{'packed' if self.packed else 'per-leaf'}"
                 f"{',pipelined' if self.pipelined else ''}{resize}: "
                 f"E[T]={self.predicted_total_s:.3f}s "
@@ -183,6 +190,20 @@ def step_cost_book(records: Sequence[StepRecord]) -> StepCostBook:
     return StepCostBook(records)
 
 
+def _approx_wait(params, d: int, t: int, m: int, npts: int) -> float:
+    """Analytic E[T_tot] of an approx candidate dropping the slowest ``t``.
+
+    Same Sec-VI order-statistic integral as the uniform scheme
+    (:func:`~repro.core.runtime_model.expected_total_runtime`) — but
+    composed directly, because that helper enforces the exact-decode
+    frontier ``s <= d - m``, which an approximate drop budget deliberately
+    exceeds (the decode stays well-defined at any budget, just certified
+    rather than exact).
+    """
+    return (d * params.t1 + params.t2 / m
+            + expected_order_stat(params, d, t, m, npts=npts))
+
+
 def _hetero_wait(fit: FitResult, loads, k: int, s: int, m: int,
                  mc_iters: int, seed: int,
                  departed: Sequence[int] = ()) -> float:
@@ -240,7 +261,8 @@ def score_plan(fit: FitResult, plan: Plan,
     book = cost_book or StepCostBook()
     n_plan = len(plan.loads)
     dep = tuple(sorted({int(i) for i in departed if 0 <= int(i) < n_plan}))
-    if plan.family == "uniform" and not dep:
+    if (plan.family == "uniform" or plan.family in APPROX_FAMILIES) \
+            and not dep:
         params = (fit.params if n_plan == fit.params.n
                   else dataclasses.replace(fit.params, n=n_plan))
         if plan.pipelined:
@@ -248,6 +270,9 @@ def score_plan(fit: FitResult, plan: Plan,
             wait = expected_total_runtime_overlapped(
                 params, plan.d, plan.s, plan.m, npts=npts,
                 eps=PIPELINE_EPS)
+        elif plan.family in APPROX_FAMILIES:
+            # approx drop budgets may exceed the exact-decode frontier
+            wait = _approx_wait(params, plan.d, plan.s, plan.m, npts)
         else:
             wait = expected_total_runtime(params, plan.d, plan.s, plan.m,
                                           npts=npts)
@@ -276,7 +301,9 @@ def rank_plans(fit: FitResult, *,
                departed: Sequence[int] = (),
                resize_options: Sequence[int] = (),
                replan_horizon: int = 200,
-               amortize_compile: bool = False) -> list[Plan]:
+               amortize_compile: bool = False,
+               approx_options: Sequence[str] = (),
+               max_err: float | None = None) -> list[Plan]:
     """Score and rank every reachable plan under a fitted straggler model.
 
     ``min_s`` floors the straggler budget (a production cluster usually
@@ -312,6 +339,20 @@ def rank_plans(fit: FitResult, *,
     - ``amortize_compile=True`` extends the recompile charge to every
       candidate (scheme switches also retrace); off by default to keep
       the classic autotuner ranking unchanged.
+
+    **Approximate families** (``approx_options``, default off): every
+    valid ``"frc"`` / ``"expander"`` construction at ``n`` workers
+    (:func:`~repro.core.approx.approx_candidates`) is priced at the
+    *largest* drop budget ``t`` whose worst-case decode-error certificate
+    clears the ceiling — ``worst_err_bound(t) <= max_err`` — so bounded
+    error buys a shorter wait (the master only waits for the fastest
+    ``n - t``).  A candidate enters the ranking **iff** its bound clears
+    the ceiling: ``max_err=None`` (or 0.0) admits only certified-exact
+    operating points (``err_bound == 0``), a negative ceiling admits
+    none, and every returned approx plan carries its certificate in
+    ``Plan.err_bound``.  Approx runtimes decode through the partial path
+    (the trainer compiles ``partial=True`` artifacts for them), which is
+    synchronous — no pipelined approx candidates.
     """
     n = fit.params.n
     book = cost_book or StepCostBook()
@@ -323,9 +364,9 @@ def rank_plans(fit: FitResult, *,
     pipe_rank = {pi: i for i, pi in enumerate(pipelined_options)}
 
     def add(family, d, s, m, k, loads, waits, resize_to=None,
-            charge_compile=False):
+            charge_compile=False, err_bound=0.0):
         # waits: {pipelined_flag: modeled wait} for the flags this scheme
-        # supports (hetero passes only {False: ...})
+        # supports (hetero and approx pass only {False: ...})
         for schedule in schedules:
             for packed in packed_options:
                 for pipelined, wait in waits.items():
@@ -346,7 +387,8 @@ def rank_plans(fit: FitResult, *,
                              schedule=schedule, packed=packed,
                              predicted_wait_s=wait, predicted_step_s=step,
                              predicted_total_s=wait + step,
-                             pipelined=pipelined, resize_to=resize_to)))
+                             pipelined=pipelined, resize_to=resize_to,
+                             err_bound=err_bound)))
 
     if "uniform" in families:
         for d in range(1, n + 1):
@@ -393,6 +435,37 @@ def rank_plans(fit: FitResult, *,
                 add("hetero", max(plan.loads), s, m, plan.k,
                     tuple(plan.loads), {False: wait},
                     charge_compile=bool(dep))
+
+    for fam in approx_options:
+        if fam not in APPROX_FAMILIES:
+            raise ValueError(
+                f"unknown approx family {fam!r}; expected one of "
+                f"{APPROX_FAMILIES}")
+        ceiling = 0.0 if max_err is None else float(max_err)
+        # expander graphs use the fixed default seed (0): the trainer must
+        # rebuild the exact graph that was ranked, across replans
+        for rep, m, code in approx_candidates(fam, n):
+            # largest drop budget whose worst-case certificate clears the
+            # ceiling: more drops always shorten the wait, and the bound is
+            # monotone in t, so search from the top.  A candidate is added
+            # iff some budget (possibly the exact region) clears.
+            t_pick, bound = None, 0.0
+            for t in range(n - 1, -1, -1):
+                b = code.worst_err_bound(t)
+                if b <= ceiling:
+                    t_pick, bound = t, b
+                    break
+            if t_pick is None:
+                continue
+            if dep:
+                if t_pick < len(dep):
+                    continue      # cannot cover the departures: inf wait
+                wait = _hetero_wait(fit, code.loads, code.num_subsets,
+                                    t_pick, m, mc_iters, seed, departed=dep)
+            else:
+                wait = _approx_wait(fit.params, code.d, t_pick, m, npts)
+            add(fam, code.d, t_pick, m, code.num_subsets, code.loads,
+                {False: wait}, err_bound=bound)
 
     for new_n in resize_options:
         new_n = int(new_n)

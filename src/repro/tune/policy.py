@@ -61,6 +61,12 @@ class AutotunePolicy:
     #: Empty = never propose a resize.
     resize_options: tuple[int, ...] = ()
     replan_horizon: int = 200       # steps the recompile charge spreads over
+    #: approximate-decode families to rank ("frc" / "expander"); empty =
+    #: exact-only search.  ``max_err`` is the worst-case decode-error
+    #: certificate ceiling a candidate's drop budget must clear
+    #: (None admits only certified-exact approx operating points).
+    approx_options: tuple[str, ...] = ()
+    max_err: float | None = None
 
 
 class Autotuner:
@@ -150,7 +156,8 @@ class Autotuner:
             hetero_threshold=p.hetero_threshold, mc_iters=p.mc_iters,
             npts=p.npts, seed=p.seed + step,
             departed=dep, resize_options=tuple(resize),
-            replan_horizon=p.replan_horizon)
+            replan_horizon=p.replan_horizon,
+            approx_options=p.approx_options, max_err=p.max_err)
         if not ranked:
             return None
         best = ranked[0]

@@ -1,0 +1,156 @@
+"""Hypothesis property suite for the approximate families (FRC + expander).
+
+Pins the tentpole's certificate contract on randomly drawn constructions,
+gradients and responder sets:
+
+- **certificate invariant** (both families): the true L2 decode gap never
+  exceeds ``err_factor * sqrt(sum_j ||g_j||^2)``;
+- **full-responder exactness**: with every worker responding the decode is
+  the uncoded sum — bitwise for FRC and dyadic-``c`` expanders (0/1
+  selection / power-of-two averaging weights on integer gradients), and
+  ``err_factor`` is exactly 0.0 for both;
+- **FRC group-liveness exactness**: whenever every repetition group keeps a
+  responder the selection decode is bitwise-exact with a zero certificate,
+  regardless of how many workers straggled.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # declared in pyproject [test]; optional at runtime
+from hypothesis import given, settings, strategies as st
+
+from repro.core import make_expander, make_frc
+
+
+# ------------------------------------------------------------- constructions
+@st.composite
+def frc_codes(draw, max_n=12):
+    s = draw(st.integers(0, 2), label="s")
+    m = draw(st.integers(1, 3), label="m")
+    blocks = draw(st.integers(1, max(1, max_n // (m * (s + 1)))),
+                  label="blocks")
+    return make_frc(blocks * m * (s + 1), s=s, m=m)
+
+
+@st.composite
+def expander_codes(draw, max_n=12, dyadic=False):
+    m = draw(st.integers(1, 3), label="m")
+    phase = draw(st.integers(1, max(1, max_n // m)), label="phase_size")
+    cs = [c for c in ((1, 2, 4) if dyadic else range(1, phase + 1))
+          if c <= phase]
+    c = draw(st.sampled_from(cs), label="c")
+    seed = draw(st.integers(0, 31), label="seed")
+    return make_expander(phase * m, c=c, m=m, seed=seed)
+
+
+def _draw_G(draw, code, integer=False):
+    l = code.m * draw(st.integers(1, 4), label="l_groups")
+    k = code.num_subsets
+    if integer:
+        cells = draw(st.lists(st.integers(-8, 8), min_size=k * l,
+                              max_size=k * l), label="G")
+    else:
+        cells = draw(st.lists(st.floats(-8, 8), min_size=k * l,
+                              max_size=k * l), label="G")
+    return np.asarray(cells, dtype=np.float64).reshape(k, l)
+
+
+def _draw_responders(draw, n, min_size=0):
+    size = draw(st.integers(min_size, n), label="n_resp")
+    return sorted(draw(st.permutations(range(n)), label="resp")[:size])
+
+
+def _gap_and_bound(code, G, responders):
+    F = code.encode(G)
+    W, factor = code.partial_decode_weights(responders)
+    mask = np.isin(np.arange(code.n), responders).astype(float)
+    ghat = np.einsum("nv,nu->vu", F * mask[:, None], W).reshape(-1)
+    gap = float(np.linalg.norm(ghat - G.sum(0)))
+    return gap, factor * float(np.linalg.norm(G)), factor
+
+
+# ------------------------------------------------------ certificate invariant
+@settings(max_examples=60, deadline=None)
+@given(st.data())
+def test_frc_certificate_bounds_true_gap(data):
+    code = data.draw(frc_codes())
+    G = _draw_G(data.draw, code)
+    resp = _draw_responders(data.draw, code.n)
+    gap, bound, _ = _gap_and_bound(code, G, resp)
+    assert gap <= bound * (1 + 1e-9) + 1e-9
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.data())
+def test_expander_certificate_bounds_true_gap(data):
+    code = data.draw(expander_codes())
+    G = _draw_G(data.draw, code)
+    resp = _draw_responders(data.draw, code.n)
+    gap, bound, _ = _gap_and_bound(code, G, resp)
+    assert gap <= bound * (1 + 1e-6) + 1e-6
+    # worst_err_bound dominates the realised certificate at this pattern size
+    t = code.n - len(resp)
+    _, _, factor = _gap_and_bound(code, G, resp)
+    assert factor <= code.worst_err_bound(t) + 1e-9
+
+
+# --------------------------------------------------- full-responder exactness
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_frc_full_response_bitwise_exact(data):
+    """Integer gradients + weight-1.0 selection: the decoded sum is the
+    uncoded sum bit for bit, and the certificate is exactly zero."""
+    code = data.draw(frc_codes())
+    G = _draw_G(data.draw, code, integer=True)
+    _, factor = code.partial_decode_weights(range(code.n))
+    assert factor == 0.0
+    got = code.decode(code.encode(G), range(code.n), partial=True)
+    assert np.array_equal(got, G.sum(0))
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_expander_full_response_exact(data):
+    """Full response decodes the uncoded sum with a certificate of exactly
+    0.0 — bitwise when c is a power of two (1/c is a dyadic rational on
+    integer gradients), allclose otherwise."""
+    code = data.draw(expander_codes(dyadic=True))
+    G = _draw_G(data.draw, code, integer=True)
+    _, factor = code.partial_decode_weights(range(code.n))
+    assert factor == 0.0
+    got = code.decode(code.encode(G), range(code.n), partial=True)
+    assert np.array_equal(got, G.sum(0))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_expander_full_response_exact_any_c(data):
+    code = data.draw(expander_codes())
+    G = _draw_G(data.draw, code)
+    got = code.decode(code.encode(G), range(code.n), partial=True)
+    np.testing.assert_allclose(got, G.sum(0), atol=1e-9 * max(
+        1.0, np.abs(G).max() * code.num_subsets))
+
+
+# ------------------------------------------------- FRC group-liveness exact
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_frc_exact_whenever_every_group_alive(data):
+    """Drop any subset of workers that keeps one clone per repetition
+    group: the decode stays bitwise-exact with a zero certificate, even far
+    beyond the structural budget s."""
+    code = data.draw(frc_codes())
+    G = _draw_G(data.draw, code, integer=True)
+    # pick one mandatory survivor per group, then keep a random extra set
+    survivors = set()
+    for g in range(code.num_groups):
+        members = np.nonzero(code.groups == g)[0]
+        survivors.add(int(data.draw(st.sampled_from(list(members)),
+                                    label=f"survivor_g{g}")))
+    extra = _draw_responders(data.draw, code.n)
+    resp = sorted(survivors | set(extra))
+    W, factor = code.partial_decode_weights(resp)
+    assert factor == 0.0
+    got = code.decode(code.encode(G), resp, partial=True)
+    assert np.array_equal(got, G.sum(0))
+    assert len(resp) >= code.num_groups          # sanity: one per group

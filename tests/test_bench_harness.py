@@ -34,12 +34,13 @@ def test_registry_has_all_targets():
     assert set(REGISTRY) == {"table1", "stability", "fig3", "auc",
                              "throughput", "straggler", "roofline",
                              "coding_packed", "autotune", "serving",
-                             "elastic"}
+                             "elastic", "approx"}
 
 
 @pytest.mark.parametrize("name", sorted(
     {"table1", "stability", "fig3", "auc", "throughput", "straggler",
-     "roofline", "coding_packed", "autotune", "serving", "elastic"}))
+     "roofline", "coding_packed", "autotune", "serving", "elastic",
+     "approx"}))
 def test_quick_bench_runs_and_validates(name, tmp_path):
     results = _results_for(name)
     assert results, f"{name} emitted no results"

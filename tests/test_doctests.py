@@ -10,6 +10,7 @@ import importlib
 import pytest
 
 MODULES = [
+    "repro.core.approx",
     "repro.core.hetero",
     "repro.core.schemes",
     "repro.core.runtime_model",

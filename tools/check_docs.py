@@ -44,6 +44,7 @@ DOCSTRING_SCOPE = (
     + [
         ROOT / "src/repro/train/coded_step.py",
         ROOT / "src/repro/train/pipeline.py",
+        ROOT / "src/repro/core/approx.py",
         ROOT / "src/repro/core/hetero.py",
         ROOT / "src/repro/core/runtime_model.py",
         ROOT / "src/repro/core/tradeoff.py",
