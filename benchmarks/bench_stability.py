@@ -1,7 +1,15 @@
 """Section III-C / IV-A numerical stability reproduction: worst-case relative
 decode error (l-inf) vs n for the Vandermonde (eq. 23 thetas) and Gaussian
 (Theorem 2) schemes.  Paper: Vandermonde stable to n<=20, ~80% error by n=23,
-crashes by n=26; Gaussian stable to n~30."""
+crashes by n=26; Gaussian stable to n~30.
+
+The ``repro.core.stable`` constructions extend the sweep past the classic
+cliff: rotation / chebyshev / block-composite codes are swept at n in
+{32, 64} — territory where the paper's Vandermonde has long crashed — and
+gated on worst-case relative decode error <= 1e-6 at n=64.  The planner's
+``rank_plans(max_cond=...)`` admission gate is exercised end to end
+(``cond_gate_respected``): the admitted stable plan set must equal exactly
+the candidates whose conditioning certificate clears the ceiling."""
 
 from __future__ import annotations
 
@@ -48,6 +56,60 @@ def sweep(kind: str, ns=(5, 8, 10, 14, 16, 20, 23, 26, 30), d=None, m=2,
     return rows
 
 
+#: (family, kwargs for make_stable at each n) swept at large n.  rotation is
+#: the hero family (near-machine-precision decode at any s); chebyshev is
+#: mid-tier (encode-limited — kept at a small straggler budget); block tiles
+#: an n0=8 Vandermonde base so per-tile decode never sees a large system.
+STABLE_SWEEP = (
+    ("rotation", lambda n: dict(d=max(3, n // 3), s=max(3, n // 3) - 2, m=2)),
+    ("chebyshev", lambda n: dict(d=4, s=2, m=2)),
+    ("block", lambda n: dict(d=3, s=1, m=2, n0=8)),
+)
+
+
+def stable_sweep(ns=(32, 64), trials: int = 3, straggler_sets: int = 6):
+    """Worst-case relative decode error of each stable family at each n."""
+    from repro.core.stable import make_stable
+
+    rows: dict[str, dict[int, float]] = {}
+    for family, mk in STABLE_SWEEP:
+        rows[family] = {}
+        for n in ns:
+            code = make_stable(family, n, **mk(n))
+            try:
+                rows[family][n] = worst_decode_error(
+                    code, trials=trials, straggler_sets=straggler_sets)
+            except Exception:  # noqa: BLE001 — inf marks a decode crash
+                rows[family][n] = float("inf")
+    return rows
+
+
+def cond_gate_respected(ceiling: float = 100.0, npts: int = 500) -> bool:
+    """End-to-end check that ``rank_plans(max_cond=...)`` admission is an iff.
+
+    Ranks stable rotation plans at n=8 under a deliberately tight ceiling
+    and compares the admitted (d, s, m) set against the ground truth from
+    ``stable_candidates``: every candidate whose certificate clears the
+    ceiling must be ranked, every one past it must be rejected, and the
+    rejection must actually trigger (some candidate exceeds the ceiling).
+    """
+    from repro.core.runtime_model import RuntimeParams
+    from repro.core.stable import stable_candidates
+    from repro.tune import rank_plans, synthetic_fit
+
+    fit = synthetic_fit(RuntimeParams(n=8, lambda1=0.8, lambda2=0.1,
+                                      t1=1.6, t2=6.0))
+    plans = rank_plans(fit, families=(), stable_options=("rotation",),
+                       max_cond=ceiling, npts=npts)
+    admitted = {(p.d, p.s, p.m) for p in plans}
+    allc = {(s + m, s, m): c for _, s, m, _, c in
+            stable_candidates("rotation", 8)}
+    expected = {k for k, c in allc.items() if c <= ceiling}
+    return (admitted == expected
+            and all(p.cond_bound <= ceiling for p in plans)
+            and len(expected) < len(allc))
+
+
 def bench_results(quick: bool = False) -> list[BenchResult]:
     ns = (8, 14, 20, 23, 30) if quick else (5, 8, 10, 14, 16, 20, 23, 26, 30)
     trials = 3 if quick else 5
@@ -67,6 +129,18 @@ def bench_results(quick: bool = False) -> list[BenchResult]:
     lines.append(f"stability_boundaries,vandermonde_ok_to_20={ok_v20},"
                  f"vandermonde_unstable_23plus={bad_v23},gaussian_ok_to_30={ok_g30}")
 
+    # ---- stable-family sweep past the classic cliff (n in {32, 64}) -----
+    stable_ns = (32, 64)
+    stable = stable_sweep(ns=stable_ns, trials=trials, straggler_sets=sets)
+    for fam in stable:
+        vals = ",".join(f"n{n}={stable[fam][n]:.3e}" for n in stable_ns)
+        lines.append(f"stability_stable,family={fam},{vals}")
+    ok_rot64 = stable["rotation"][64] <= 1e-6
+    ok_blk64 = stable["block"][64] <= 1e-6
+    gate_ok = cond_gate_respected(npts=200 if quick else 1000)
+    lines.append(f"stability_stable_summary,rotation_ok_1e6_n64={ok_rot64},"
+                 f"block_ok_1e6_n64={ok_blk64},cond_gate_respected={gate_ok}")
+
     def crashsafe(x: float):
         return "crash" if math.isinf(x) else x
 
@@ -83,16 +157,28 @@ def bench_results(quick: bool = False) -> list[BenchResult]:
             "gaussian_ok_to_30": float(ok_g30),
             "worst_vandermonde_n20": min(float(vand[20]), CRASH),
             "worst_gaussian_n30": min(float(gaus[30]), CRASH),
+            "stable_rotation_ok_1e6_n64": float(ok_rot64),
+            "stable_block_ok_1e6_n64": float(ok_blk64),
+            "cond_gate_respected": float(gate_ok),
+            "worst_rotation_n64": min(float(stable["rotation"][64]), CRASH),
+            "worst_chebyshev_n64": min(float(stable["chebyshev"][64]), CRASH),
+            "worst_block_n64": min(float(stable["block"][64]), CRASH),
         },
-        params={"ns": list(ns), "trials": trials, "straggler_sets": sets,
+        params={"ns": list(ns), "stable_ns": list(stable_ns),
+                "trials": trials, "straggler_sets": sets,
                 "m": 2, "quick": quick},
         env=capture_env(),
         gates={"vandermonde_ok_to_20": "max",
                "vandermonde_unstable_23plus": "max",
-               "gaussian_ok_to_30": "max"},
+               "gaussian_ok_to_30": "max",
+               "stable_rotation_ok_1e6_n64": "max",
+               "stable_block_ok_1e6_n64": "max",
+               "cond_gate_respected": "max"},
         extra={"lines": lines,
                "vandermonde": {str(n): crashsafe(v) for n, v in vand.items()},
-               "gaussian": {str(n): crashsafe(v) for n, v in gaus.items()}},
+               "gaussian": {str(n): crashsafe(v) for n, v in gaus.items()},
+               "stable": {fam: {str(n): crashsafe(v) for n, v in row.items()}
+                          for fam, row in stable.items()}},
     )
     return [result]
 

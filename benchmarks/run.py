@@ -22,9 +22,11 @@ import sys
 import time
 import traceback
 
-# the straggler e2e bench needs a multi-device host platform; the flag must
-# be set before the first jax import (benchmark modules import jax at import)
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+# the straggler e2e bench needs a multi-device host platform (64 slots for
+# its large-n stable-family rows); the flag must be set before the first jax
+# import (benchmark modules import jax at import)
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=64")
 
 # modules that drive benches but register no spec of their own
 _NON_BENCH_MODULES = {"run", "report", "check_regression"}

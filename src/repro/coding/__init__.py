@@ -15,7 +15,8 @@ the ``Trainer`` and the serving ``CodedServer`` alike.
 from .backends import (BACKEND_NAMES, CodecBackend, PallasBackend, RefBackend,
                        resolve_backend)
 from .codec import Codec, decode_tree, encode_leaf, encode_tree, make_codec
-from .inputs import coding_worker_index, make_step_inputs, uncovered_subsets
+from .inputs import (admit_code, coding_worker_index, make_step_inputs,
+                     uncovered_subsets)
 from .layout import groups_to_leaf, leaf_to_groups
 from .packing import (WIRE_ALIGN, LeafSlot, PackPlan, WireBucket, enc_shape,
                       make_pack_plan, pack_bucket, pack_param_groups,
@@ -43,4 +44,5 @@ __all__ = [
     "all_gather_wire", "all_to_all_wire",
     "leaf_to_groups", "groups_to_leaf",
     "make_step_inputs", "coding_worker_index", "uncovered_subsets",
+    "admit_code",
 ]

@@ -87,6 +87,52 @@ def make_step_inputs(code: GradCode, stragglers: Sequence[int] | np.ndarray = ()
     return out
 
 
+def admit_code(code: GradCode, n_data: int | None = None,
+               max_cond: float | None = None) -> GradCode:
+    """Admission check for a scheme object entering the coded runtime.
+
+    Validates the ``GradCode`` duck contract the step builder relies on —
+    coefficient/placement shape consistency and a mesh-degree match when
+    ``n_data`` is given — and, when ``max_cond`` is set, that the
+    construction's *certified* worst-|F| conditioning
+    (:func:`repro.core.stable.certified_cond_of`) clears the ceiling: an
+    uncertified construction (certificate ``inf``) is rejected, mirroring
+    the planner's ``rank_plans(max_cond=...)`` admission gate at the point
+    where a code actually reaches the wire.  Returns ``code`` unchanged on
+    success so call sites can wrap construction in place.
+    """
+    n, d, m = code.n, code.d, code.m
+    C = np.asarray(code.C)
+    placement = np.asarray(code.placement())
+    valid = np.asarray(code.slot_mask())
+    if C.shape != (n, d, m):
+        raise ValueError(
+            f"code.C has shape {C.shape}, expected (n, d, m) = {(n, d, m)}")
+    if placement.shape != (n, d) or valid.shape != (n, d):
+        raise ValueError(
+            f"placement/slot_mask shapes {placement.shape}/{valid.shape} "
+            f"do not match (n, d) = {(n, d)}")
+    k = int(getattr(code, "num_subsets", n))
+    if placement[valid].size and (placement[valid].min() < 0
+                                  or placement[valid].max() >= k):
+        raise ValueError(
+            f"placement references subsets outside 0..{k - 1}")
+    if n_data is not None and n != n_data:
+        raise ValueError(
+            f"code has n={n} workers but the mesh provides "
+            f"n_data={n_data} data-parallel slots")
+    if max_cond is not None:
+        from repro.core.stable import certified_cond_of
+        cond = certified_cond_of(code)
+        if not cond <= float(max_cond):
+            raise ValueError(
+                f"certified decode conditioning {cond:.3g} exceeds the "
+                f"admission ceiling max_cond={float(max_cond):.3g} for "
+                f"{code.describe()}; pick a stable family "
+                f"(repro.core.stable) or raise the ceiling")
+    return code
+
+
 def uncovered_subsets(code: GradCode,
                       stragglers: Sequence[int] | np.ndarray = ()) -> int:
     """Number of data subsets whose every holder straggled (their

@@ -9,6 +9,9 @@ Public API:
   ExpanderCode, make_frc,
   make_expander                     — approximate families with certified
                                       decode from any pattern (``approx``)
+  BlockCompositeCode, make_stable   — well-conditioned constructions that
+                                      scale to hundreds of workers, with
+                                      certified conditioning (``stable``)
   tradeoff                          — Theorem 1 feasibility helpers
   runtime_model                     — Section VI shifted-exponential model
   stability                         — Theorem 2 / condition-number machinery
@@ -18,17 +21,19 @@ shim through PR 6 and was removed in PR 7 (no in-repo importers remained);
 use ``repro.coding`` directly.
 """
 from . import (approx, cyclic, hetero, polynomial, random_code,
-               runtime_model, stability, tradeoff)
+               runtime_model, stability, stable, tradeoff)
 from .approx import (ExpanderCode, FractionalRepetitionCode, make_approx,
                      make_expander, make_frc)
 from .hetero import HeteroCode, HeteroPlan, make_hetero_code, plan_hetero
 from .schemes import GradCode, make_code, uncoded
+from .stable import BlockCompositeCode, make_stable
 
 __all__ = [
     "GradCode", "make_code", "uncoded",
     "HeteroCode", "HeteroPlan", "make_hetero_code", "plan_hetero",
     "FractionalRepetitionCode", "ExpanderCode",
     "make_frc", "make_expander", "make_approx",
+    "BlockCompositeCode", "make_stable",
     "approx", "cyclic", "hetero", "polynomial", "random_code",
-    "runtime_model", "stability", "tradeoff",
+    "runtime_model", "stability", "stable", "tradeoff",
 ]

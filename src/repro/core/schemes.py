@@ -34,8 +34,10 @@ class GradCode:
     d: int
     s: int
     m: int
-    kind: str = "poly"  # "poly" (Section III) | "random" (Theorem 2)
-    seed: int = 0       # for kind == "random"
+    # "poly" (Section III) | "random" (Theorem 2) | "chebyshev" / "rotation"
+    # (well-conditioned orthonormal-row variants — repro.core.stable)
+    kind: str = "poly"
+    seed: int = 0       # for kind == "random" / "rotation"
 
     def __post_init__(self):
         if self.d != self.s + self.m:
@@ -44,7 +46,7 @@ class GradCode:
                 f"got d={self.d}, s={self.s}, m={self.m}")
         if not (1 <= self.d <= self.n and self.m >= 1 and self.s >= 0):
             raise ValueError(f"invalid parameters {self}")
-        if self.kind not in ("poly", "random"):
+        if self.kind not in ("poly", "random", "chebyshev", "rotation"):
             raise ValueError(f"unknown scheme kind {self.kind!r}")
 
     # ---------------------------------------------------------------- build
@@ -53,11 +55,18 @@ class GradCode:
         """(n-s, n) evaluation matrix."""
         if self.kind == "poly":
             return polynomial.vandermonde(self.n, self.s)
+        if self.kind in ("chebyshev", "rotation"):
+            from . import stable   # lazy: stable imports this module
+            if self.kind == "chebyshev":
+                return stable.chebyshev_V(self.n, self.s)
+            return stable.rotation_V(self.n, self.s, self.seed)
         return random_code.gaussian_V(self.n, self.s, self.seed)
 
     @cached_property
     def B(self) -> np.ndarray:
-        """(m*n, n-s) coding matrix."""
+        """(m*n, n-s) coding matrix (the Theorem-2 window construction
+        works for any V with invertible cyclic-window submatrices — all
+        the non-polynomial kinds route through it)."""
         if self.kind == "poly":
             return polynomial.build_B(self.n, self.d, self.s, self.m)
         return random_code.build_B_from_V(self.n, self.d, self.m, self.V)

@@ -41,8 +41,12 @@ def gamma_upper_bound(n: int, n1: int, kappa: float) -> int | None:
     if kappa <= thresh:
         return None
     target = (math.sqrt(kappa) - 1) / (math.sqrt(kappa) + 1)
-    # f is strictly decreasing on [n1, n]; find smallest integer x with f <= target
-    for x in range(n1, n + 1):
+    # f is strictly decreasing on [n1, n); find smallest integer x with
+    # f <= target.  x = n is excluded: entropy(1.0) clamps to 0 there, so
+    # f(n) = sqrt(n1/n) < target holds *identically* whenever kappa clears
+    # the threshold above — scanning it made the inversion vacuously
+    # "succeed" at x = n even when eq. (7) genuinely has no solution.
+    for x in range(n1, n):
         if f_n_n1(n, n1, x) <= target:
             return x
     return None

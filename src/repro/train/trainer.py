@@ -251,13 +251,20 @@ class Trainer:
     def _current_plan(self):
         """The active scheme as a `repro.tune.Plan` (seed for hysteresis)."""
         from repro.core.approx import ExpanderCode, FractionalRepetitionCode
+        from repro.core.stable import BlockCompositeCode
         from repro.tune import Plan, scheme_k, scheme_loads
         k = scheme_k(self.code)
         loads = scheme_loads(self.code)
+        n0 = None
         if isinstance(self.code, FractionalRepetitionCode):
             fam = "frc"
         elif isinstance(self.code, ExpanderCode):
             fam = "expander"
+        elif isinstance(self.code, BlockCompositeCode):
+            fam = "block"
+            n0 = self.code.n0
+        elif getattr(self.code, "kind", "") in ("chebyshev", "rotation"):
+            fam = self.code.kind
         else:
             fam = ("uniform" if k == self.code.n and len(set(loads)) == 1
                    else "hetero")
@@ -265,7 +272,7 @@ class Trainer:
                     k=k, loads=loads, schedule=self.schedule,
                     packed=self.packed, predicted_wait_s=0.0,
                     predicted_step_s=0.0, predicted_total_s=0.0,
-                    pipelined=self.pipelined)
+                    pipelined=self.pipelined, n0=n0)
 
     def _code_for_plan(self, plan):
         """Materialise the scheme object a ranked plan selects."""
@@ -279,6 +286,14 @@ class Trainer:
             # so the materialised graph is the one that was ranked
             from repro.core.approx import make_approx
             return make_approx(plan.family, n, plan.d // plan.m, plan.m)
+        if plan.family in ("chebyshev", "rotation", "block"):
+            # stable families are recoverable from (family, d, s, m) plus
+            # the plan's tile size n0 for block composites; the rotation
+            # basis seed is pinned to the planner's default (0), matching
+            # the construction whose conditioning certificate was ranked
+            from repro.core.stable import make_stable
+            return make_stable(plan.family, n, plan.d, plan.s, plan.m,
+                               n0=plan.n0)
         # hetero plans carry their exact load assignment (which may encode
         # elastic zero-load holes at departed workers) — build the code
         # from those loads directly rather than re-deriving from speeds,

@@ -42,6 +42,8 @@ from repro.core.hetero import plan_hetero
 from repro.core.runtime_model import (expected_order_stat,
                                       expected_total_runtime,
                                       expected_total_runtime_overlapped)
+from repro.core.stable import (STABLE_FAMILIES, classic_certified_cond,
+                               stable_candidates)
 
 from .estimator import FitResult
 from .telemetry import StepRecord
@@ -58,7 +60,7 @@ PIPELINE_EPS = 1e-3
 class Plan:
     """One ranked operating point: scheme + schedule + wire format + cost."""
 
-    family: str                 # "uniform" | "hetero" | "frc" | "expander"
+    family: str    # uniform | hetero | frc | expander | chebyshev | rotation | block
     d: int                      # computation load (max per-worker for hetero)
     s: int                      # straggler budget (drop budget for approx)
     m: int                      # communication reduction
@@ -74,20 +76,32 @@ class Plan:
     #: approx families: worst-case decode-error certificate at the plan's
     #: drop budget ``s`` (``worst_err_bound(s)``); 0.0 for exact families
     err_bound: float = 0.0
+    #: certified worst-|F| ``cond(V_F V_F^T)`` of the plan's construction —
+    #: the quantity the ``max_cond`` admission gate checked; 0.0 when the
+    #: gate was off (no certificate computed)
+    cond_bound: float = 0.0
+    #: block composite family: tile size of the 2D composition (the plan's
+    #: construction is rebuilt from ``(family, d, s, m, n0)``)
+    n0: int | None = None
 
     @property
     def scheme_key(self) -> tuple:
         """Hashable identity of the codec this plan selects (sans costs)."""
         return (self.family, self.d, self.s, self.m, self.k, self.loads,
-                self.schedule, self.packed, self.pipelined, self.resize_to)
+                self.schedule, self.packed, self.pipelined, self.resize_to,
+                self.n0)
 
     def describe(self) -> str:
         """One-line human-readable summary."""
         extra = f",loads={list(self.loads)},k={self.k}" \
             if self.family == "hetero" else ""
+        if self.family == "block":
+            extra += f",n0={self.n0}"
         resize = f",resize->{self.resize_to}" if self.resize_to else ""
         err = (f",err<={self.err_bound:.3g}"
                if self.family in APPROX_FAMILIES else "")
+        if self.cond_bound:
+            err += f",cond<={self.cond_bound:.3g}"
         return (f"{self.family}(d={self.d},s={self.s},m={self.m}"
                 f"{extra}{err}),{self.schedule},"
                 f"{'packed' if self.packed else 'per-leaf'}"
@@ -261,8 +275,8 @@ def score_plan(fit: FitResult, plan: Plan,
     book = cost_book or StepCostBook()
     n_plan = len(plan.loads)
     dep = tuple(sorted({int(i) for i in departed if 0 <= int(i) < n_plan}))
-    if (plan.family == "uniform" or plan.family in APPROX_FAMILIES) \
-            and not dep:
+    if (plan.family == "uniform" or plan.family in APPROX_FAMILIES
+            or plan.family in STABLE_FAMILIES) and not dep:
         params = (fit.params if n_plan == fit.params.n
                   else dataclasses.replace(fit.params, n=n_plan))
         if plan.pipelined:
@@ -303,7 +317,9 @@ def rank_plans(fit: FitResult, *,
                replan_horizon: int = 200,
                amortize_compile: bool = False,
                approx_options: Sequence[str] = (),
-               max_err: float | None = None) -> list[Plan]:
+               max_err: float | None = None,
+               stable_options: Sequence[str] = (),
+               max_cond: float | None = None) -> list[Plan]:
     """Score and rank every reachable plan under a fitted straggler model.
 
     ``min_s`` floors the straggler budget (a production cluster usually
@@ -353,6 +369,26 @@ def rank_plans(fit: FitResult, *,
     ``Plan.err_bound``.  Approx runtimes decode through the partial path
     (the trainer compiles ``partial=True`` artifacts for them), which is
     synchronous — no pipelined approx candidates.
+
+    **Stable families and the condition gate** (``stable_options`` /
+    ``max_cond``, default off): every *certified* construction of the
+    requested :data:`~repro.core.stable.STABLE_FAMILIES` enters the search
+    with the same exact-decode frontier and wait model as the uniform
+    family, carrying its certified worst-|F| ``cond(V_F V_F^T)`` in
+    ``Plan.cond_bound`` (closed-form/enumerated for ``chebyshev`` /
+    ``rotation``, per-block for ``block`` composites — see
+    :func:`repro.core.stable.certified_max_cond`).  A candidate is
+    admitted **iff** its certificate clears the ceiling:
+    ``cond_bound <= max_cond``, with ``max_cond=None`` meaning "any finite
+    certificate" (uncertified constructions — certificate ``inf`` — are
+    never admitted).  When ``max_cond`` is set it also gates the *uniform*
+    family: classic poly/random candidates are certified by exhaustive
+    small-n enumeration
+    (:func:`~repro.core.stable.classic_certified_cond`) and rejected past
+    the ceiling — at large n that enumeration is honestly ``inf``, which
+    is exactly the regime where the gate must steer the search to the
+    stable families.  With ``max_cond=None`` the uniform family is ungated
+    (the classic ranking is bit-identical when both knobs are unused).
     """
     n = fit.params.n
     book = cost_book or StepCostBook()
@@ -364,7 +400,7 @@ def rank_plans(fit: FitResult, *,
     pipe_rank = {pi: i for i, pi in enumerate(pipelined_options)}
 
     def add(family, d, s, m, k, loads, waits, resize_to=None,
-            charge_compile=False, err_bound=0.0):
+            charge_compile=False, err_bound=0.0, cond_bound=0.0, n0=None):
         # waits: {pipelined_flag: modeled wait} for the flags this scheme
         # supports (hetero and approx pass only {False: ...})
         for schedule in schedules:
@@ -388,7 +424,10 @@ def rank_plans(fit: FitResult, *,
                              predicted_wait_s=wait, predicted_step_s=step,
                              predicted_total_s=wait + step,
                              pipelined=pipelined, resize_to=resize_to,
-                             err_bound=err_bound)))
+                             err_bound=err_bound, cond_bound=cond_bound,
+                             n0=n0)))
+
+    cond_ceiling = float("inf") if max_cond is None else float(max_cond)
 
     if "uniform" in families:
         for d in range(1, n + 1):
@@ -396,6 +435,16 @@ def rank_plans(fit: FitResult, *,
                 s = d - m
                 if s < min_s:
                     continue
+                cond = 0.0
+                if max_cond is not None:
+                    # the gate is on: certify the classic construction's
+                    # worst-|F| conditioning (exact small-n enumeration,
+                    # honestly inf at large n) and reject past the ceiling.
+                    # seed 0 = make_code's default — the code the trainer
+                    # would materialise for this plan
+                    cond = classic_certified_cond(n, s)
+                    if not cond <= cond_ceiling:
+                        continue
                 waits = {}
                 for pipelined in pipelined_options:
                     if pipelined:
@@ -413,7 +462,8 @@ def rank_plans(fit: FitResult, *,
                     else:
                         waits[False] = expected_total_runtime(
                             fit.params, d, s, m, npts=npts)
-                add("uniform", d, s, m, n, (d,) * n, waits)
+                add("uniform", d, s, m, n, (d,) * n, waits,
+                    cond_bound=cond)
 
     want_hetero = ("hetero!" in families
                    or ("hetero" in families
@@ -466,6 +516,36 @@ def rank_plans(fit: FitResult, *,
                 wait = _approx_wait(fit.params, code.d, t_pick, m, npts)
             add(fam, code.d, t_pick, m, code.num_subsets, code.loads,
                 {False: wait}, err_bound=bound)
+
+    for fam in stable_options:
+        if fam not in STABLE_FAMILIES:
+            raise ValueError(
+                f"unknown stable family {fam!r}; expected one of "
+                f"{STABLE_FAMILIES}")
+        # rotation bases use the fixed default seed (0): the trainer must
+        # rebuild the exact construction that was ranked, across replans
+        for d, s, m, n0, cond in stable_candidates(fam, n):
+            if s < min_s:
+                continue
+            if not cond <= cond_ceiling:
+                continue    # admission iff the certificate clears the gate
+            waits = {}
+            for pipelined in pipelined_options:
+                if pipelined:
+                    if dep:
+                        continue  # no per-step failover when pipelined
+                    waits[True] = expected_total_runtime_overlapped(
+                        fit.params, d, s, m, npts=npts, eps=PIPELINE_EPS)
+                elif dep:
+                    if s < len(dep):
+                        continue  # cannot cover the departures: inf
+                    waits[False] = _hetero_wait(
+                        fit, (d,) * n, n, s, m, mc_iters, seed,
+                        departed=dep)
+                else:
+                    waits[False] = expected_total_runtime(
+                        fit.params, d, s, m, npts=npts)
+            add(fam, d, s, m, n, (d,) * n, waits, cond_bound=cond, n0=n0)
 
     for new_n in resize_options:
         new_n = int(new_n)

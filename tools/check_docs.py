@@ -49,6 +49,7 @@ DOCSTRING_SCOPE = (
         ROOT / "src/repro/core/runtime_model.py",
         ROOT / "src/repro/core/tradeoff.py",
         ROOT / "src/repro/core/stability.py",
+        ROOT / "src/repro/core/stable.py",
     ]
 )
 
